@@ -1,0 +1,85 @@
+"""§2.3 comparison: Striped vs Split vs Flat layouts.
+
+Measures what the paper discusses qualitatively: storage amplification
+(striped pads row groups to a common aligned size; split duplicates footer
+metadata in the index), discovery cost (split reads only .index files;
+striped reads last objects), and scan latency parity (all layouts feed the
+same scan_op, so query results and scan costs must match).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_result, selectivity_predicate, \
+    taxi_like_table
+from repro.aformat.expressions import field
+from repro.core import (dataset, make_cluster, write_flat, write_split,
+                        write_striped)
+from repro.storage.perfmodel import ClusterSpec, rebalance_nodes, \
+    simulate_scan
+
+ROWS = 200_000
+FILES = 8
+RG_ROWS = 4_096
+
+WRITERS = {"flat": write_flat, "striped": write_striped,
+           "split": write_split}
+
+
+def run() -> dict:
+    table = taxi_like_table(ROWS)
+    raw_bytes = table.nbytes()
+    out: dict = {"rows": ROWS, "in_memory_mb": round(raw_bytes / 1e6, 2),
+                 "layouts": {}}
+    pred = selectivity_predicate(table, 0.1)
+    for layout, writer in WRITERS.items():
+        fs = make_cluster(8)
+        import time
+        t0 = time.perf_counter()
+        for i in range(FILES):
+            part = table.slice(i * (ROWS // FILES), ROWS // FILES)
+            writer(fs, f"/d/p{i}.arw", part, row_group_rows=RG_ROWS)
+        write_s = time.perf_counter() - t0
+        stored = sum(o.stats.bytes_stored for o in fs.store.osds) \
+            / fs.store.replication
+        t0 = time.perf_counter()
+        ds = dataset(fs, "/d")
+        discover_s = time.perf_counter() - t0
+        sc = ds.scanner(format="pushdown", columns=["trip_id"],
+                        predicate=pred, num_threads=1)
+        res = sc.to_table()
+        replay = simulate_scan(rebalance_nodes(sc.metrics.tasks, 8),
+                               ClusterSpec(nodes=8))
+        out["layouts"][layout] = {
+            "stored_mb": round(stored / 1e6, 2),
+            "amplification": round(stored / raw_bytes, 3),
+            "write_s": round(write_s, 3),
+            "discovery_bytes": ds.discovery_bytes,
+            "discover_s": round(discover_s, 4),
+            "fragments": len(ds.fragments()),
+            "objects": len(fs.store.list_objects()),
+            "scan_latency_s": round(replay.makespan_s, 4),
+            "rows_out": len(res),
+        }
+    rows_out = {l: v["rows_out"] for l, v in out["layouts"].items()}
+    out["all_layouts_agree"] = len(set(rows_out.values())) == 1
+    return out
+
+
+def main():
+    out = run()
+    save_result("layout_compare", out)
+    print(f"# layout_compare: {out['rows']} rows, "
+          f"{out['in_memory_mb']} MB in-memory")
+    cols = ["stored_mb", "amplification", "discovery_bytes", "fragments",
+            "objects", "scan_latency_s", "rows_out"]
+    print("layout," + ",".join(cols))
+    for layout, r in out["layouts"].items():
+        print(layout + "," + ",".join(str(r[c]) for c in cols))
+    print("all layouts agree on results:", out["all_layouts_agree"])
+    return out
+
+
+if __name__ == "__main__":
+    main()

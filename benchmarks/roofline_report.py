@@ -1,0 +1,94 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--knobs baseline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["llama-3.2-vision-90b", "mamba2-780m", "phi4-mini-3.8b",
+              "gemma3-1b", "qwen2-72b", "starcoder2-7b", "mixtral-8x22b",
+              "llama4-maverick-400b-a17b", "whisper-small", "zamba2-1.2b"]
+
+
+def load(out_dir="results/dryrun", knobs="baseline"):
+    recs = {}
+    for path in glob.glob(os.path.join(out_dir, f"*__{knobs}.json")):
+        with open(path) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}µs"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(recs, mesh="single"):
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+        "| roofline frac | useful/HLO flops | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r.get("skipped"):
+                lines.append(f"| {arch} | {shape} | — | — | — | SKIP "
+                             f"({r['reason'][:42]}) | — | — | — |")
+                continue
+            rf = r["roofline"]
+            mem = r["memory"]["peak_bytes_est"] / 2 ** 30
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(rf['compute_s'])} | "
+                f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+                f"{rf['bottleneck'].replace('_s', '')} | "
+                f"{rf['roofline_fraction']:.3f} | "
+                f"{r['useful_flops_ratio']:.2f} | {mem:.1f} GiB |")
+    return "\n".join(lines)
+
+
+def interesting(recs):
+    """Worst roofline fraction / most collective-bound among heavy cells."""
+    rows = []
+    for (arch, shape, mesh), r in recs.items():
+        if mesh != "single" or r.get("skipped"):
+            continue
+        rf = r["roofline"]
+        if r["cost"]["flops_per_device"] < 1e12:
+            continue   # decode cells: trivially memory-bound, not hillclimb
+        rows.append((rf["roofline_fraction"], rf["bottleneck"],
+                     rf["collective_s"] / max(rf["compute_s"], 1e-30),
+                     arch, shape))
+    rows.sort()
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--knobs", default="baseline")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(knobs=args.knobs)
+    print(table(recs, args.mesh))
+    print("\n-- most interesting (worst fraction first, heavy cells) --")
+    for frac, dom, ratio, arch, shape in interesting(recs)[:8]:
+        print(f"{frac:.3f}  {dom:12s} coll/comp={ratio:5.2f}  "
+              f"{arch} {shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""End-to-end training driver: storage -> pushdown ingest -> train -> ckpt.
+
+Trains a small LM for a few hundred steps on a Zipf-structured corpus
+served out of the simulated Ceph cluster with storage-side quality
+filtering, checkpointing into the same object store, and verifies the loss
+actually falls below the unigram-entropy start.  This is deliverable (b)'s
+"train a model for a few hundred steps" driver at CPU scale; the same code
+path scales up via repro.launch.train (remove --smoke, pick a mesh).
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 200
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.aformat.expressions import field
+from repro.configs import smoke_config
+from repro.core import dataset, make_cluster
+from repro.data import PipelineConfig, TokenPipeline, synth_corpus, \
+    write_corpus
+from repro.distrib import CheckpointManager
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import build_training
+from repro.sharding import default_rules
+from repro.train import optim
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=2048)
+    args = ap.parse_args()
+
+    # -- corpus in the object store, Zipf unigrams (learnable) ---------------
+    fs = make_cluster(8)
+    corpus = synth_corpus(1000, mean_doc_len=400, vocab_size=args.vocab,
+                          seed=0, distribution="zipf")
+    write_corpus(fs, "/corpus", corpus, num_shards=8, row_group_rows=16384)
+    ds = dataset(fs, "/corpus")
+    pipe = TokenPipeline(ds, PipelineConfig(
+        seq_len=args.seq, local_batch=args.batch,
+        predicate=field("quality") > 0.3, format="pushdown",
+        num_threads=2))
+
+    # -- ~1M-param model, AdamW ----------------------------------------------
+    cfg = smoke_config("starcoder2-7b")
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=128, d_ff=256,
+                              num_heads=4, num_kv_heads=4, head_dim=32,
+                              vocab_size=args.vocab, remat=False)
+    mesh = make_local_mesh(1, 1)
+    rules = default_rules()
+    opt = optim.OptConfig(peak_lr=3e-3, warmup_steps=20,
+                          decay_steps=args.steps)
+    state, _, fn = build_training(cfg, mesh, rules, opt)
+    cm = CheckpointManager(fs, "/ckpt", keep=2)
+
+    losses = []
+    it = iter(pipe)
+    t0 = time.perf_counter()
+    for step in range(1, args.steps + 1):
+        batch = next(it)
+        state, mets = fn(state, {k: jnp.asarray(v)
+                                 for k, v in batch.items()})
+        losses.append(float(mets["loss"]))
+        if step % 25 == 0 or step == 1:
+            toks = step * args.seq * args.batch
+            print(f"step {step:4d} loss {losses[-1]:7.4f} "
+                  f"tok/s {toks / (time.perf_counter() - t0):8.0f}",
+                  flush=True)
+        if step % 100 == 0:
+            cm.save_async(state, step)
+    cm.wait()
+
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"(uniform entropy would be {np.log(args.vocab):.3f})")
+    print(f"checkpoints in object store: {cm.steps()}")
+    print("ingest:", pipe.stats())
+    assert last < first - 0.5, "model failed to learn the Zipf unigrams"
+    print("OK: loss fell well below the initial cross-entropy")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Column-chunk encodings: PLAIN / DICTIONARY / RLE / DELTA / BITPACK.
+
+Each encoder maps a values array -> list of raw buffers; the footer records
+which encoding was used.  The *decode* cost of these encodings (plus the
+codec) is exactly the client-CPU work the paper offloads to storage.
+
+Hardware-adaptation note (DESIGN.md §2): DICTIONARY and DELTA decode are
+data-parallel (gather / prefix-sum) and transfer to the TPU as Pallas
+kernels (repro.kernels).  RLE run expansion is variable-length sequential
+and stays on the host path — documented as the non-transferable piece.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PLAIN, DICT, RLE, DELTA, BITPACK = "plain", "dict", "rle", "delta", "bitpack"
+
+
+def _string_buffers(values) -> list[bytes]:
+    raw = [("" if v is None else str(v)).encode() for v in values]
+    offsets = np.zeros(len(raw) + 1, np.int64)
+    np.cumsum([len(r) for r in raw], out=offsets[1:])
+    return [offsets.tobytes(), b"".join(raw)]
+
+
+def _string_from_buffers(bufs, n):
+    offsets = np.frombuffer(bufs[0], np.int64)
+    payload = bufs[1]
+    out = np.empty(n, object)
+    for i in range(n):
+        out[i] = payload[offsets[i]:offsets[i + 1]].decode()
+    return out
+
+
+def choose_encoding(field_type: str, values: np.ndarray) -> str:
+    if field_type == "bool":
+        return BITPACK
+    if field_type == "string":
+        uniq = len(set(map(str, values[:4096])))
+        return DICT if uniq <= max(1, len(values) // 4) else PLAIN
+    if field_type in ("int32", "int64"):
+        sample = values[: min(len(values), 4096)]
+        if len(sample) > 1:
+            d = np.diff(sample)
+            if len(d) and d.min() >= 0 and d.max() <= 127:
+                return DELTA
+            runs = int(np.count_nonzero(d)) + 1
+            if runs <= len(sample) // 8:
+                return RLE
+        uniq = len(np.unique(sample))
+        if uniq <= max(1, min(len(values) // 4, 60_000)):
+            return DICT
+        return PLAIN
+    # floats: dictionary only when very low cardinality
+    uniq = len(np.unique(values[: min(len(values), 4096)]))
+    if uniq <= max(1, len(values) // 16):
+        return DICT
+    return PLAIN
+
+
+def encode(field_type: str, encoding: str, values: np.ndarray) -> list[bytes]:
+    if encoding == PLAIN:
+        if field_type == "string":
+            return _string_buffers(values)
+        return [np.ascontiguousarray(values).tobytes()]
+    if encoding == BITPACK:
+        return [np.packbits(values.astype("?")).tobytes()]
+    if encoding == DICT:
+        if field_type == "string":
+            svals = np.asarray([str(v) for v in values], object)
+            uniq, inv = np.unique(svals.astype(str), return_inverse=True)
+            return [inv.astype(np.int32).tobytes(),
+                    *_string_buffers(uniq.astype(object))]
+        uniq, inv = np.unique(values, return_inverse=True)
+        return [inv.astype(np.int32).tobytes(),
+                np.ascontiguousarray(uniq).tobytes()]
+    if encoding == DELTA:
+        base = values[:1].astype(np.int64)
+        deltas = np.diff(values.astype(np.int64))
+        if len(deltas) and (deltas.min() < -128 or deltas.max() > 127):
+            raise ValueError("delta overflow; caller should fall back")
+        return [base.tobytes(), deltas.astype(np.int8).tobytes()]
+    if encoding == RLE:
+        values = np.asarray(values)
+        if len(values) == 0:
+            return [b"", b""]
+        change = np.nonzero(np.diff(values))[0] + 1
+        starts = np.concatenate([[0], change])
+        ends = np.concatenate([change, [len(values)]])
+        return [np.ascontiguousarray(values[starts]).tobytes(),
+                (ends - starts).astype(np.int32).tobytes()]
+    raise ValueError(encoding)
+
+
+def decode(field_type: str, encoding: str, bufs: list[bytes], n: int,
+           numpy_dtype) -> np.ndarray:
+    if encoding == PLAIN:
+        if field_type == "string":
+            return _string_from_buffers(bufs, n)
+        return np.frombuffer(bufs[0], numpy_dtype)[:n].copy()
+    if encoding == BITPACK:
+        return np.unpackbits(np.frombuffer(bufs[0], np.uint8))[:n].astype("?")
+    if encoding == DICT:
+        idx = np.frombuffer(bufs[0], np.int32)[:n]
+        if field_type == "string":
+            dict_n = (len(np.frombuffer(bufs[1], np.int64)) - 1)
+            uniq = _string_from_buffers(bufs[1:], dict_n)
+        else:
+            uniq = np.frombuffer(bufs[1], numpy_dtype)
+        return uniq[idx]
+    if encoding == DELTA:
+        base = np.frombuffer(bufs[0], np.int64)
+        deltas = np.frombuffer(bufs[1], np.int8).astype(np.int64)
+        out = np.empty(n, np.int64)
+        if n:
+            out[0] = base[0]
+            np.cumsum(deltas, out=out[1:]) if n > 1 else None
+            if n > 1:
+                out[1:] += base[0]
+        return out.astype(numpy_dtype)
+    if encoding == RLE:
+        vals = np.frombuffer(bufs[0], numpy_dtype)
+        runs = np.frombuffer(bufs[1], np.int32)
+        return np.repeat(vals, runs)[:n]
+    raise ValueError(encoding)

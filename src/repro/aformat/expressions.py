@@ -1,0 +1,265 @@
+"""Predicate expression AST with vectorized evaluation and stats pruning.
+
+``Expr.evaluate(table)`` -> bool mask (client- or storage-side scan).
+``Expr.prune(stats)``    -> {ALL, NONE, SOME}: whether a row group can be
+skipped (NONE) or fully taken (ALL) from its footer min/max statistics —
+Parquet predicate pushdown (paper §2.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import numpy as np
+
+ALL, SOME, NONE = "all", "some", "none"
+
+
+class Expr:
+    def evaluate(self, table) -> np.ndarray:
+        raise NotImplementedError
+
+    def prune(self, stats: Mapping[str, "ColumnStats"]) -> str:
+        return SOME
+
+    def columns(self) -> set[str]:
+        return set()
+
+    # sugar
+    def __and__(self, o):
+        return And(self, o)
+
+    def __or__(self, o):
+        return Or(self, o)
+
+    def __invert__(self):
+        return Not(self)
+
+    def to_json(self) -> dict:
+        raise NotImplementedError
+
+    @staticmethod
+    def from_json(d: dict | None) -> "Expr | None":
+        if d is None:
+            return None
+        kind = d["kind"]
+        if kind == "cmp":
+            return Cmp(d["op"], d["column"], d["value"])
+        if kind == "and":
+            return And(Expr.from_json(d["lhs"]), Expr.from_json(d["rhs"]))
+        if kind == "or":
+            return Or(Expr.from_json(d["lhs"]), Expr.from_json(d["rhs"]))
+        if kind == "not":
+            return Not(Expr.from_json(d["expr"]))
+        if kind == "isin":
+            return IsIn(d["column"], d["values"])
+        raise ValueError(kind)
+
+
+_OPS = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+@dataclasses.dataclass
+class Cmp(Expr):
+    op: str
+    column: str
+    value: Any
+
+    def evaluate(self, table):
+        col = table.column(self.column)
+        vals = col.values
+        if col.field.type == "string":
+            vals = np.asarray([str(v) for v in vals])
+        mask = _OPS[self.op](vals, self.value)
+        if col.validity is not None:
+            mask = mask & col.validity
+        return np.asarray(mask, "?")
+
+    def prune(self, stats):
+        st = stats.get(self.column)
+        if st is None or st.min is None:
+            return SOME
+        lo, hi, v = st.min, st.max, self.value
+        full = st.null_count == 0
+        if self.op == "==":
+            if v < lo or v > hi:
+                return NONE
+            if lo == hi == v and full:
+                return ALL
+        elif self.op == "!=":
+            if lo == hi == v:
+                return NONE
+            if (v < lo or v > hi) and full:
+                return ALL
+        elif self.op == "<":
+            if lo >= v:
+                return NONE
+            if hi < v and full:
+                return ALL
+        elif self.op == "<=":
+            if lo > v:
+                return NONE
+            if hi <= v and full:
+                return ALL
+        elif self.op == ">":
+            if hi <= v:
+                return NONE
+            if lo > v and full:
+                return ALL
+        elif self.op == ">=":
+            if hi < v:
+                return NONE
+            if lo >= v and full:
+                return ALL
+        return SOME
+
+    def columns(self):
+        return {self.column}
+
+    def to_json(self):
+        v = self.value
+        if isinstance(v, np.generic):
+            v = v.item()
+        return {"kind": "cmp", "op": self.op, "column": self.column,
+                "value": v}
+
+
+@dataclasses.dataclass
+class IsIn(Expr):
+    column: str
+    values: list
+
+    def evaluate(self, table):
+        col = table.column(self.column)
+        vals = col.values
+        if col.field.type == "string":
+            vals = np.asarray([str(v) for v in vals])
+        mask = np.isin(vals, np.asarray(self.values))
+        if col.validity is not None:
+            mask = mask & col.validity
+        return np.asarray(mask, "?")
+
+    def prune(self, stats):
+        st = stats.get(self.column)
+        if st is None or st.min is None:
+            return SOME
+        if all(v < st.min or v > st.max for v in self.values):
+            return NONE
+        return SOME
+
+    def columns(self):
+        return {self.column}
+
+    def to_json(self):
+        return {"kind": "isin", "column": self.column,
+                "values": [v.item() if isinstance(v, np.generic) else v
+                           for v in self.values]}
+
+
+@dataclasses.dataclass
+class And(Expr):
+    lhs: Expr
+    rhs: Expr
+
+    def evaluate(self, table):
+        return self.lhs.evaluate(table) & self.rhs.evaluate(table)
+
+    def prune(self, stats):
+        a, b = self.lhs.prune(stats), self.rhs.prune(stats)
+        if NONE in (a, b):
+            return NONE
+        if a == ALL and b == ALL:
+            return ALL
+        return SOME
+
+    def columns(self):
+        return self.lhs.columns() | self.rhs.columns()
+
+    def to_json(self):
+        return {"kind": "and", "lhs": self.lhs.to_json(),
+                "rhs": self.rhs.to_json()}
+
+
+@dataclasses.dataclass
+class Or(Expr):
+    lhs: Expr
+    rhs: Expr
+
+    def evaluate(self, table):
+        return self.lhs.evaluate(table) | self.rhs.evaluate(table)
+
+    def prune(self, stats):
+        a, b = self.lhs.prune(stats), self.rhs.prune(stats)
+        if ALL in (a, b):
+            return ALL
+        if a == NONE and b == NONE:
+            return NONE
+        return SOME
+
+    def columns(self):
+        return self.lhs.columns() | self.rhs.columns()
+
+    def to_json(self):
+        return {"kind": "or", "lhs": self.lhs.to_json(),
+                "rhs": self.rhs.to_json()}
+
+
+@dataclasses.dataclass
+class Not(Expr):
+    expr: Expr
+
+    def evaluate(self, table):
+        return ~self.expr.evaluate(table)
+
+    def prune(self, stats):
+        inner = self.expr.prune(stats)
+        if inner == ALL:
+            return NONE
+        if inner == NONE:
+            return ALL
+        return SOME
+
+    def columns(self):
+        return self.expr.columns()
+
+    def to_json(self):
+        return {"kind": "not", "expr": self.expr.to_json()}
+
+
+def field(name: str):
+    """field("x") > 3  -> Cmp(">", "x", 3)."""
+    return _FieldRef(name)
+
+
+@dataclasses.dataclass
+class _FieldRef:
+    name: str
+
+    def __eq__(self, v):  # type: ignore[override]
+        return Cmp("==", self.name, v)
+
+    def __ne__(self, v):  # type: ignore[override]
+        return Cmp("!=", self.name, v)
+
+    def __lt__(self, v):
+        return Cmp("<", self.name, v)
+
+    def __le__(self, v):
+        return Cmp("<=", self.name, v)
+
+    def __gt__(self, v):
+        return Cmp(">", self.name, v)
+
+    def __ge__(self, v):
+        return Cmp(">=", self.name, v)
+
+    def isin(self, values):
+        return IsIn(self.name, list(values))

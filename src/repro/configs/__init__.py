@@ -1,0 +1,75 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+
+from repro.configs.llama32_vision_90b import CONFIG as llama32_vision_90b
+from repro.configs.mamba2_780m import CONFIG as mamba2_780m
+from repro.configs.phi4_mini_3p8b import CONFIG as phi4_mini_3p8b
+from repro.configs.gemma3_1b import CONFIG as gemma3_1b
+from repro.configs.qwen2_72b import CONFIG as qwen2_72b
+from repro.configs.starcoder2_7b import CONFIG as starcoder2_7b
+from repro.configs.mixtral_8x22b import CONFIG as mixtral_8x22b
+from repro.configs.llama4_maverick import CONFIG as llama4_maverick
+from repro.configs.whisper_small import CONFIG as whisper_small
+from repro.configs.zamba2_1p2b import CONFIG as zamba2_1p2b
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        llama32_vision_90b,
+        mamba2_780m,
+        phi4_mini_3p8b,
+        gemma3_1b,
+        qwen2_72b,
+        starcoder2_7b,
+        mixtral_8x22b,
+        llama4_maverick,
+        whisper_small,
+        zamba2_1p2b,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests (shapes only)."""
+    import dataclasses
+
+    cfg = get_config(name)
+    updates: dict = dict(
+        num_layers=min(cfg.num_layers, 4),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=max(1, min(cfg.num_kv_heads, 2))
+        if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        attn_chunk=64,
+        scan_layers=cfg.scan_layers,
+        opt_moment_dtype="float32",
+    )
+    if cfg.num_experts:
+        updates.update(num_experts=4, experts_per_token=min(2, cfg.experts_per_token),
+                       moe_layer_freq=cfg.moe_layer_freq)
+    if cfg.ssm_state:
+        updates.update(ssm_state=16, ssm_headdim=32, ssm_chunk=32)
+    if cfg.encoder_layers:
+        updates.update(encoder_layers=2, encoder_seq=64)
+    if cfg.num_image_tokens:
+        updates.update(num_image_tokens=32,
+                       cross_attn_every=min(cfg.cross_attn_every, 2))
+    if cfg.attn_every:
+        updates.update(attn_every=2)
+    if cfg.sliding_window:
+        updates.update(sliding_window=32)
+    if cfg.local_global_ratio:
+        updates.update(local_global_ratio=cfg.local_global_ratio, sliding_window=32)
+    return dataclasses.replace(cfg, name=f"{cfg.name}-smoke", **updates)

@@ -1,0 +1,199 @@
+"""Model / shape configuration for the assigned architecture pool."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    source: str                      # provenance tag from the assignment
+
+    num_layers: int = 12
+    d_model: int = 768
+    num_heads: int = 12
+    num_kv_heads: int = 12
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    d_ff: int = 3072
+    vocab_size: int = 32000
+
+    act: Literal["swiglu", "gelu"] = "swiglu"
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_global: float = 0.0   # !=0 -> separate theta for global layers
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    causal: bool = True
+
+    # -- attention pattern ---------------------------------------------------
+    sliding_window: int = 0          # 0 = full attention
+    local_global_ratio: int = 0      # n>0 -> n local layers per 1 global
+    attn_chunk: int = 1024           # flash-style kv-chunk size (seq>=8k)
+
+    # -- MoE -----------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_layer_freq: int = 1          # 2 -> every other layer is MoE
+    capacity_factor: float = 1.25
+    moe_partition: Literal["tensor", "expert"] = "tensor"
+
+    # -- SSM (Mamba2 / SSD) ---------------------------------------------------
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    ssm_ngroups: int = 1
+
+    # -- hybrid (zamba2-style shared attention) -------------------------------
+    attn_every: int = 0              # >0: shared attn block after every k SSM layers
+
+    # -- encoder-decoder (whisper) --------------------------------------------
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # stubbed frame-embedding length
+
+    # -- VLM (llama-3.2-vision) ------------------------------------------------
+    cross_attn_every: int = 0        # >0: 1 cross-attn layer per k self layers
+    num_image_tokens: int = 0        # stubbed patch-embedding length
+
+    # -- execution ------------------------------------------------------------
+    scan_layers: bool = True
+    remat: bool = True
+    prenorm_gather: bool = False     # §Perf q1: SP gather before the norm
+    tuned_hints: bool = False        # §Perf: head-shard attention scores +
+                                     # SSD decay tensors (anchors the big
+                                     # softmax/segsum intermediates)
+    boundary_barrier: bool = False   # §Perf: optimization_barrier after the
+                                     # SP gather so XLA cannot fuse the f32
+                                     # upcast into the all-gather
+    train_chunked: bool = False      # §Perf: flash-chunked attention in the
+                                     # train path (bounds score transients)
+    rs_epilogue: bool = False        # §Perf: explicit bf16 psum_scatter
+                                     # epilogue on TP out-projections
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    opt_moment_dtype: str = "float32"   # "int8" for the >=70B configs
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # -- derived ---------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:         # Mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_ngroups * self.ssm_state
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (needs non-quadratic full-context handling)."""
+        return (
+            self.family in ("ssm", "hybrid")
+            or self.sliding_window > 0
+            or self.local_global_ratio > 0
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init_params; used for 6ND)."""
+        d, hd = self.d_model, self.head_dim
+        emb = self.vocab_size * d
+        if not self.tie_embeddings:
+            emb *= 2
+        total = emb + d  # final norm
+        if self.family == "ssm":
+            total += self.num_layers * self._ssm_layer_params()
+            return total
+        if self.family == "hybrid":
+            total += self.num_layers * self._ssm_layer_params()
+            total += self._attn_params() + self._mlp_params(self.d_ff) + 2 * d
+            return total
+        attn = self._attn_params()
+        per_layer = attn + 2 * d  # two norms
+        n_moe = 0
+        if self.num_experts:
+            n_moe = self.num_layers // self.moe_layer_freq
+        n_dense = self.num_layers - n_moe
+        total += n_dense * (per_layer + self._mlp_params(self.d_ff))
+        total += n_moe * (per_layer + d * self.num_experts
+                          + self.num_experts * self._mlp_params(self.d_ff))
+        if self.cross_attn_every:
+            n_cross = self.num_layers // (self.cross_attn_every)
+            total += n_cross * (attn + self._mlp_params(self.d_ff) + 2 * d)
+        if self.encoder_layers:
+            total += self.encoder_layers * (
+                self._attn_params() + self._mlp_params(self.d_ff) + 2 * d)
+            # decoder cross-attention
+            total += self.num_layers * (self._attn_params() + d)
+        return total
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        p = d * (self.num_heads + 2 * self.num_kv_heads) * hd
+        p += self.num_heads * hd * d
+        if self.qkv_bias:
+            p += (self.num_heads + 2 * self.num_kv_heads) * hd
+        return p
+
+    def _mlp_params(self, d_ff: int) -> int:
+        mult = 3 if self.act == "swiglu" else 2
+        return mult * self.d_model * d_ff
+
+    def _ssm_layer_params(self) -> int:
+        d = self.d_model
+        di, cv = self.d_inner, self.conv_dim
+        proj_in = d * (2 * di + 2 * self.ssm_ngroups * self.ssm_state
+                       + self.ssm_nheads)
+        conv = cv * self.ssm_conv_width + cv
+        extra = 3 * self.ssm_nheads + di  # A_log, D, dt_bias, gated norm
+        return proj_in + conv + extra + di * d + d  # + out proj + layer norm
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE uses top-k of experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        n_moe = self.num_layers // self.moe_layer_freq
+        inactive = (self.num_experts - self.experts_per_token)
+        return self.param_count() - n_moe * inactive * self._mlp_params(self.d_ff)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: Literal["train", "prefill", "decode"]
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether a (arch, shape) dry-run cell runs, and why not if skipped."""
+    if shape.name == "long_500k":
+        if cfg.family == "encdec":
+            return False, "enc-dec decoder is bounded-context by construction"
+        if not cfg.sub_quadratic:
+            return False, "pure full-attention arch; long_500k needs sub-quadratic"
+    return True, ""

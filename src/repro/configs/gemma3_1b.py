@@ -1,0 +1,31 @@
+"""gemma3-1b [dense] — 5:1 local:global attention, 128k context.
+
+26L d_model=1152 4H (GQA kv=1) d_ff=6912 vocab=262144.
+[hf:google/gemma-3-1b-pt; unverified]
+Local layers: sliding window 1024, rope theta 10k; global layers: full
+attention, rope theta 1M. Pattern encoded as a per-layer window array so a
+per-layer window list covers the 5:1 schedule exactly; layers are
+unrolled (26 small layers) so local ring caches and global full caches
+coexist per layer at decode time.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    source="hf:google/gemma-3-1b-pt; unverified",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    act="gelu",
+    qk_norm=True,
+    rope_theta=10_000.0,
+    rope_theta_global=1_000_000.0,
+    sliding_window=1024,
+    local_global_ratio=5,
+    scan_layers=False,
+)

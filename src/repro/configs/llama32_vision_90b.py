@@ -1,0 +1,27 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers.
+
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+Pattern: 1 cross-attention layer per 5 layers (4 self + 1 cross per group).
+Modality frontend is a STUB: input_specs() provides precomputed patch
+embeddings already projected to d_model.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    num_image_tokens=1600,
+    scan_layers=True,
+    opt_moment_dtype="int8",
+)

@@ -1,0 +1,30 @@
+"""llama4-maverick-400b-a17b [moe] — 128 experts top-1, early fusion.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+MoE on every other layer (moe_layer_freq=2) which reproduces the published
+~400B total / ~17B active split with 128 routed experts; the chunked-
+attention iRoPE detail is modeled as full attention (see DESIGN.md §6).
+128 experts divide the 16-way model axis: expert partitioning (EP).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    rope_theta=500_000.0,
+    num_experts=128,
+    experts_per_token=1,
+    moe_layer_freq=2,
+    moe_partition="expert",
+    scan_layers=True,
+    opt_moment_dtype="int8",
+)

@@ -1,0 +1,28 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, sliding-window attention.
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768. [arXiv:2401.04088; hf]
+8 experts do not divide the 16-way model axis, so the baseline partitions
+experts tensor-style (d_ff over "model"); see EXPERIMENTS.md for the EP
+variant explored in the perf pass.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    source="arXiv:2401.04088; hf",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    rope_theta=1_000_000.0,
+    sliding_window=4096,
+    num_experts=8,
+    experts_per_token=2,
+    moe_partition="tensor",
+    scan_layers=True,
+    opt_moment_dtype="int8",
+)

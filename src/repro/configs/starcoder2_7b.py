@@ -1,0 +1,22 @@
+"""starcoder2-7b [dense] — GQA, RoPE.
+
+32L d_model=4608 36H (GQA kv=4) d_ff=18432 vocab=49152. [arXiv:2402.19173; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    family="dense",
+    source="arXiv:2402.19173; hf",
+    num_layers=32,
+    d_model=4608,
+    num_heads=36,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18432,
+    vocab_size=49152,
+    act="gelu",
+    rope_theta=1_000_000.0,
+    sliding_window=4096,
+    scan_layers=True,
+)

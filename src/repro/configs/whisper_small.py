@@ -1,0 +1,25 @@
+"""whisper-small [audio] — encoder-decoder; conv frontend STUBBED.
+
+12L d_model=768 12H d_ff=3072 vocab=51865. [arXiv:2212.04356; unverified]
+input_specs() provides precomputed frame embeddings (B, encoder_seq, d);
+the mel-spectrogram conv frontend is a stub per the assignment.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    source="arXiv:2212.04356; unverified",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    act="gelu",
+    encoder_layers=12,
+    encoder_seq=1500,
+    causal=True,
+    scan_layers=True,
+)

@@ -1,0 +1,26 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + weight-shared attention block.
+
+38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000, ssm_state=64.
+[arXiv:2411.15242; hf]
+One shared attention+MLP block (single weight set) is invoked after every
+6th Mamba2 layer; layers are unrolled (38 small layers) so the shared-block
+schedule is exact.  LoRA per-invocation deltas omitted (DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    source="arXiv:2411.15242; hf",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_headdim=64,
+    attn_every=6,
+    scan_layers=False,
+)

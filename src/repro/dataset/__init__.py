@@ -1,0 +1,8 @@
+from repro.dataset.dataset import Dataset, ScanMetrics, Scanner, dataset
+from repro.dataset.format import (FileFormat, ParquetFormat,
+                                  PushdownParquetFormat, TaskRecord)
+from repro.dataset.fragment import Fragment
+
+__all__ = ["Dataset", "ScanMetrics", "Scanner", "dataset", "FileFormat",
+           "ParquetFormat", "PushdownParquetFormat", "TaskRecord",
+           "Fragment"]

@@ -1,0 +1,111 @@
+"""FileFormat: where a fragment's scan executes.
+
+``ParquetFormat``          — client-side scan: column-chunk bytes travel
+                             over the wire, decode/filter burn client CPU.
+``PushdownParquetFormat``  — the paper's contribution: ``scan_op`` runs on
+                             the storage node holding the object; only the
+                             filtered/projected Arrow-IPC result travels.
+
+Switching the format argument switches the placement — nothing else in the
+Dataset/Scanner API changes (paper §2.2, RadosParquetFileFormat).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+from repro.aformat import parquet
+from repro.aformat.expressions import Expr
+from repro.aformat.table import Table
+from repro.dataset.fragment import Fragment
+from repro.storage.cephfs import CephFS, DirectObjectAccess, FileSource
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    """Per-fragment accounting — feeds the Fig. 5/6 performance model."""
+
+    where: str            # "client" or "osd"
+    node: int             # osd id (-1 for client-only work)
+    cpu_s: float          # decode/filter CPU burned at `where`
+    wire_bytes: int       # bytes that crossed the network to the client
+    client_cpu_s: float   # residual client CPU (IPC decode / materialize)
+    rows_out: int
+    hedged: bool = False
+
+
+class FileFormat:
+    """Scan a fragment; returns (Table, TaskRecord)."""
+
+    name = "abstract"
+
+    def scan_fragment(self, fs: CephFS, frag: Fragment,
+                      columns: Sequence[str] | None,
+                      predicate: Expr | None) -> tuple[Table, TaskRecord]:
+        raise NotImplementedError
+
+
+class ParquetFormat(FileFormat):
+    """Client-side scan: read (compressed) column chunks through CephFS,
+    decode + filter on the client."""
+
+    name = "parquet"
+
+    def scan_fragment(self, fs, frag, columns, predicate):
+        wire = 0
+
+        def on_read(n):
+            nonlocal wire
+            wire += n
+
+        src = FileSource(fs, frag.path, on_read=on_read)
+        t0 = time.perf_counter()
+        meta = frag.client_meta
+        if meta is None:
+            meta = parquet.read_footer(src)
+        rg = meta.row_groups[frag.client_rg_index]
+        tbl = parquet.scan_row_group(src, meta, rg, columns, predicate)
+        cpu = time.perf_counter() - t0
+        rec = TaskRecord("client", -1, cpu, wire, cpu, len(tbl))
+        return tbl, rec
+
+
+class PushdownParquetFormat(FileFormat):
+    """Storage-side scan (the paper's RADOS Parquet): invoke ``scan_op`` on
+    the object through DirectObjectAccess; the node decodes/filters and
+    returns Arrow IPC; the client only deserializes buffers."""
+
+    name = "pushdown"
+
+    def __init__(self, *, hedge_threshold_s: float | None = None):
+        self.hedge_threshold_s = hedge_threshold_s
+
+    def _payload(self, frag, columns, predicate) -> dict[str, Any]:
+        payload: dict[str, Any] = {
+            "columns": list(columns) if columns is not None else None,
+            "predicate": predicate.to_json() if predicate is not None else None,
+            "row_groups": [frag.rg_in_object],
+        }
+        if frag.footer is not None:
+            payload["footer"] = frag.footer.serialize()
+        return payload
+
+    def scan_fragment(self, fs, frag, columns, predicate):
+        doa = DirectObjectAccess(fs)
+        payload = self._payload(frag, columns, predicate)
+        if self.hedge_threshold_s is not None:
+            result, osd_id, el, hedged = doa.call_hedged(
+                frag.path, frag.obj_idx, "scan_op", payload,
+                hedge_threshold_s=self.hedge_threshold_s)
+        else:
+            result, osd_id, el = doa.call(frag.path, frag.obj_idx,
+                                          "scan_op", payload)
+            hedged = False
+        t0 = time.perf_counter()
+        tbl = Table.from_ipc(result)
+        client_cpu = time.perf_counter() - t0
+        rec = TaskRecord("osd", osd_id, el, len(result), client_cpu,
+                         len(tbl), hedged=hedged)
+        return tbl, rec

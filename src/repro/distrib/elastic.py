@@ -1,0 +1,124 @@
+"""Elastic scaling + health: survive node loss without losing the run.
+
+``HealthMonitor`` is the heartbeat registry (hosts report in; silence past
+the timeout marks a host dead).  ``plan_downsize`` picks the largest viable
+mesh after losses — the data axis shrinks (it carries DP replicas; dropping
+replicas is semantically free modulo batch size), the model axis is fixed
+(it carries weight shards).  ``remesh_state`` re-shards a live state pytree
+onto the new mesh; the equivalent cold path is a CheckpointManager.restore
+with the new shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding import AxisRules, tree_shardings
+
+
+class InsufficientDevicesError(RuntimeError):
+    pass
+
+
+class HealthMonitor:
+    """Heartbeat table for host liveness (coordinator side)."""
+
+    def __init__(self, hosts: Sequence[int], timeout_s: float = 30.0):
+        now = time.monotonic()
+        self.timeout_s = timeout_s
+        self._last: dict[int, float] = {h: now for h in hosts}
+        self._marked_down: set[int] = set()
+
+    def heartbeat(self, host: int, now: float | None = None):
+        if host in self._marked_down:
+            return  # must rejoin explicitly
+        self._last[host] = time.monotonic() if now is None else now
+
+    def mark_down(self, host: int):
+        self._marked_down.add(host)
+
+    def rejoin(self, host: int, now: float | None = None):
+        self._marked_down.discard(host)
+        self._last[host] = time.monotonic() if now is None else now
+
+    def dead_hosts(self, now: float | None = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        dead = {h for h, t in self._last.items()
+                if now - t > self.timeout_s}
+        return sorted(dead | self._marked_down)
+
+    def healthy_hosts(self, now: float | None = None) -> list[int]:
+        dead = set(self.dead_hosts(now))
+        return sorted(h for h in self._last if h not in dead)
+
+
+@dataclasses.dataclass(frozen=True)
+class DownsizePlan:
+    old_shape: tuple[int, ...]
+    new_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    devices_kept: int
+
+    @property
+    def changed(self) -> bool:
+        return self.old_shape != self.new_shape
+
+
+def plan_downsize(mesh: Mesh, healthy_devices: int, *,
+                  shrink_axis: str = "data") -> DownsizePlan:
+    """Largest mesh that fits the healthy device count by shrinking only
+    ``shrink_axis`` (keep it a power of two so batch/FSDP divisibility
+    survives)."""
+    names = tuple(mesh.axis_names)
+    shape = tuple(int(mesh.shape[n]) for n in names)
+    idx = names.index(shrink_axis)
+    others = int(np.prod([s for i, s in enumerate(shape) if i != idx]))
+    max_shrink = healthy_devices // others
+    if max_shrink < 1:
+        raise InsufficientDevicesError(
+            f"{healthy_devices} devices cannot host model axes {others}")
+    new_size = 1 << (max_shrink.bit_length() - 1)   # floor pow2
+    new_size = min(new_size, shape[idx])
+    new_shape = tuple(new_size if i == idx else s
+                      for i, s in enumerate(shape))
+    return DownsizePlan(shape, new_shape, names,
+                        int(np.prod(new_shape)))
+
+
+def build_mesh(devices: Sequence, shape: tuple[int, ...],
+               axis_names: tuple[str, ...]) -> Mesh:
+    """Mesh over an explicit device subset (the survivors)."""
+    need = int(np.prod(shape))
+    if len(devices) < need:
+        raise InsufficientDevicesError(f"need {need}, have {len(devices)}")
+    arr = np.asarray(devices[:need], dtype=object).reshape(shape)
+    return Mesh(arr, axis_names)
+
+
+def remesh_state(state: Any, spec_tree: Any, new_mesh: Mesh,
+                 rules: AxisRules) -> Any:
+    """Live resharding of a state pytree onto a new mesh."""
+    shardings = tree_shardings(new_mesh, rules, state, spec_tree)
+    return jax.device_put(state, shardings)
+
+
+def elastic_downsize(state: Any, spec_tree: Any, mesh: Mesh,
+                     rules: AxisRules, healthy_devices: Sequence, *,
+                     shrink_axis: str = "data"):
+    """One-call node-loss recovery: plan, rebuild mesh, re-shard.
+
+    Returns (new_mesh, new_state, plan).  The caller re-makes its jitted
+    train step against the new mesh (shardings changed) and scales its
+    per-rank batch so the global batch is preserved or documented.
+    """
+    plan = plan_downsize(mesh, len(healthy_devices), shrink_axis=shrink_axis)
+    new_mesh = build_mesh(list(healthy_devices), plan.new_shape,
+                          plan.axis_names)
+    new_state = remesh_state(state, spec_tree, new_mesh, rules)
+    return new_mesh, new_state, plan

@@ -1,0 +1,60 @@
+"""Dictionary decode — Pallas TPU kernel.
+
+DICT-encoded column chunks store (codes: intK, dictionary: D values);
+decoding is ``values[i] = dictionary[codes[i]]``.  On CPU this is a
+pointer-chasing gather; on TPU we keep the dictionary resident in VMEM
+across the whole grid (its BlockSpec index_map is constant, so Pallas
+streams it in once) and decode a (TILE,) code block per step.
+
+Two in-kernel strategies, chosen statically by dictionary size:
+
+  one-hot matmul (D <= ONEHOT_MAX)   codes -> one-hot (TILE, D) -> MXU
+       dot with the dictionary.  Systolic-array friendly; exact for f32
+       payloads and for ints < 2**24 (all our dictionaries qualify).
+  vector gather  (D  > ONEHOT_MAX)   jnp.take on the VMEM-resident
+       dictionary (VPU dynamic-gather path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024
+ONEHOT_MAX = 2048     # one-hot matmul cutover: (TILE x D) f32 must fit VMEM
+
+
+def _kernel(codes_ref, dict_ref, out_ref, *, use_onehot: bool):
+    codes = codes_ref[...]                      # (TILE,) int32
+    d = dict_ref[...]                           # (D_pad,) f32
+    if use_onehot:
+        onehot = (codes[:, None] == jnp.arange(d.shape[0], dtype=jnp.int32)
+                  [None, :]).astype(jnp.float32)          # (TILE, D)
+        out_ref[...] = onehot @ d                          # MXU
+    else:
+        out_ref[...] = jnp.take(d, codes, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dict_decode(codes: jax.Array, dictionary: jax.Array, *,
+                interpret: bool = False) -> jax.Array:
+    """codes (N,) int32, dictionary (D,) f32 -> (N,) f32 decoded values.
+
+    N must be a multiple of TILE and D a multiple of 128 (ops.py pads)."""
+    n, = codes.shape
+    d, = dictionary.shape
+    if n % TILE or d % 128:
+        raise ValueError(f"unpadded shapes N={n} D={d}; use ops.py")
+    use_onehot = d <= ONEHOT_MAX
+    return pl.pallas_call(
+        functools.partial(_kernel, use_onehot=use_onehot),
+        grid=(n // TILE,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,)),
+                  pl.BlockSpec((d,), lambda i: (0,))],   # resident
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), dictionary.dtype),
+        interpret=interpret,
+    )(codes, dictionary)

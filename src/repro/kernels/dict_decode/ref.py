@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for dictionary decode."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dict_decode_ref(codes, dictionary):
+    return jnp.take(dictionary, codes, axis=0)

@@ -1,0 +1,44 @@
+"""Public entry for the fused predicate kernel: padding + program build.
+
+``build_program`` translates a (restricted) repro.aformat expression — a
+flat AND/OR of column-vs-constant comparisons — into the kernel's static
+Program against a given column ordering.  Columns are cast to f32; the
+f32-exactness domain (|int| < 2**24) covers every corpus column we emit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.predicate_fused.predicate_fused import (TILE, Program,
+                                                           Term,
+                                                           predicate_mask)
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+def build_program(terms: list[tuple[int, str, float]], combine: str = "and",
+                  negate: bool = False) -> Program:
+    return Program(tuple(Term(c, op, float(v)) for c, op, v in terms),
+                   combine, negate)
+
+
+@functools.partial(jax.jit, static_argnames=("prog",))
+def _stack(cols, prog):
+    return jnp.stack([c.astype(jnp.float32) for c in cols])
+
+
+def fused_predicate(cols: list[jax.Array | np.ndarray], prog: Program
+                    ) -> jax.Array:
+    """cols: list of (N,) arrays -> (N,) bool mask."""
+    n = int(np.shape(cols[0])[0])
+    stacked = _stack([jnp.asarray(c) for c in cols], prog)
+    pad = (-n) % TILE
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    mask = predicate_mask(stacked, prog, interpret=_INTERPRET)
+    return mask[:n].astype(bool)

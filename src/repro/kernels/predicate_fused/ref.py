@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused predicate kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.predicate_fused.predicate_fused import Program, Term
+
+
+def _term(cols, t: Term):
+    x = cols[t.col]
+    v = jnp.float32(t.value)
+    return {"lt": x < v, "le": x <= v, "gt": x > v, "ge": x >= v,
+            "eq": x == v, "ne": x != v}[t.op]
+
+
+def predicate_mask_ref(cols, prog: Program):
+    acc = _term(cols, prog.terms[0])
+    for t in prog.terms[1:]:
+        m = _term(cols, t)
+        acc = acc & m if prog.combine == "and" else acc | m
+    if prog.negate:
+        acc = ~acc
+    return acc.astype(jnp.uint8)

@@ -1,0 +1,53 @@
+"""Public entry for token packing: pad, tile-pack, gather-merge.
+
+``pack_tokens`` is the full TPU Filter analogue: (values, mask, capacity)
+-> (packed[capacity], count).  The expensive data-dependent compaction
+runs in the Pallas kernel per tile; the inter-tile merge is one gather
+computed from the tile-count prefix sum (plain XLA, bandwidth-bound).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.token_pack.token_pack import TILE, tile_pack
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+def _pack(values, mask, capacity: int, interpret: bool):
+    n = values.shape[0]
+    pad = (-n) % TILE
+    v = jnp.pad(values.astype(jnp.float32), (0, pad))
+    m = jnp.pad(mask.astype(jnp.uint8), (0, pad))
+    packed_tiles, counts = tile_pack(v, m, interpret=interpret)
+
+    offsets = jnp.cumsum(counts) - counts            # tile -> global base
+    total = jnp.minimum(jnp.sum(counts), capacity)
+    # output slot j comes from tile t(j) = searchsorted(cum, j, right),
+    # local slot j - offsets[t]
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    cum = jnp.cumsum(counts)
+    t = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    t = jnp.minimum(t, counts.shape[0] - 1)
+    local = j - offsets[t]
+    flat = packed_tiles.reshape(-1)
+    out = jnp.where(j < total, flat[t * TILE + local], 0.0)
+    return out, total
+
+
+def pack_tokens(values, mask, capacity: int):
+    """values (N,), mask (N,) -> (packed (capacity,), count scalar).
+
+    Integer inputs must be f32-exact (< 2**24): true for token ids."""
+    values = jnp.asarray(values)
+    out_dtype = values.dtype
+    out, total = _pack(values, jnp.asarray(mask), capacity, _INTERPRET)
+    if jnp.issubdtype(out_dtype, jnp.integer):
+        out = jnp.round(out).astype(out_dtype)
+    return out, total

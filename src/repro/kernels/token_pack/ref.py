@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for token packing."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_ref(values, mask, capacity: int, fill=0):
+    """Variable-length filter, then pad to capacity (numpy semantics)."""
+    v = np.asarray(values)
+    m = np.asarray(mask).astype(bool)
+    kept = v[m][:capacity]
+    out = np.full(capacity, fill, v.dtype)
+    out[: len(kept)] = kept
+    return out, min(int(m.sum()), capacity)
+
+
+def tile_pack_ref(values, mask, tile: int):
+    """Oracle for the in-kernel per-tile stage."""
+    v = np.asarray(values).reshape(-1, tile)
+    m = np.asarray(mask).astype(bool).reshape(-1, tile)
+    tiles = v.shape[0]
+    packed = np.zeros((tiles, tile), np.float32)
+    counts = np.zeros(tiles, np.int32)
+    for t in range(tiles):
+        kept = v[t][m[t]]
+        packed[t, : len(kept)] = kept
+        counts[t] = len(kept)
+    return packed, counts

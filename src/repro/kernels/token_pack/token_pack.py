@@ -1,0 +1,63 @@
+"""Masked stream compaction (token packing) — Pallas TPU kernel.
+
+Arrow's CPU ``Filter`` kernel emits a variable-length output — impossible
+on TPU, where every shape is static.  The TPU-idiomatic equivalent returns
+(fixed-capacity packed buffer, valid count).  Strategy:
+
+  per tile (in-kernel, this file):
+    pos     = exclusive-cumsum(mask)            # VPU scan
+    onehot  = (pos[i] == j) & mask[i]           # (TILE, TILE) selection mx
+    packed  = onehot^T @ values                 # MXU matmul compaction
+    count   = sum(mask)
+
+  across tiles (ops.py epilogue, plain XLA):
+    per-tile packed buffers are gathered to their global offsets
+    (cumsum of counts) with one take — cheap, bandwidth-bound.
+
+The matmul trick turns data-dependent scatter (which the MXU cannot do)
+into a dense systolic op; values must be f32-exact (floats, or ints
+< 2**24 — token ids always are).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 512    # (TILE x TILE) f32 one-hot = 1 MiB VMEM
+
+
+def _kernel(vals_ref, mask_ref, packed_ref, count_ref):
+    v = vals_ref[...]                                   # (TILE,) f32
+    m = mask_ref[...].astype(jnp.int32)                 # (TILE,)
+    pos = jnp.cumsum(m) - m                             # exclusive scan
+    idx = jnp.arange(TILE, dtype=jnp.int32)
+    onehot = ((pos[:, None] == idx[None, :]) &
+              (m[:, None] == 1)).astype(jnp.float32)    # (TILE, TILE)
+    packed_ref[...] = (onehot.T @ v)[None, :]           # (1, TILE)
+    count_ref[...] = jnp.sum(m, keepdims=True)          # (1,)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tile_pack(values: jax.Array, mask: jax.Array, *,
+              interpret: bool = False):
+    """values (N,) f32, mask (N,) uint8 -> (N//TILE, TILE) per-tile packed
+    buffers + (N//TILE,) counts.  N must be a multiple of TILE."""
+    n, = values.shape
+    if n % TILE:
+        raise ValueError(f"N={n} not a multiple of {TILE}; pad in ops.py")
+    tiles = n // TILE
+    return pl.pallas_call(
+        _kernel,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,)),
+                  pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((tiles, TILE), jnp.float32),
+                   jax.ShapeDtypeStruct((tiles,), jnp.int32)],
+        interpret=interpret,
+    )(values, mask)

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS_EXTRA", ""))
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+# production meshes using 512 placeholder host devices.  The two lines above
+# MUST run before any jax import (jax locks the device count on first init).
+
+import argparse
+import gc
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch import knobs as knobs_mod
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import api as model_api
+from repro.sharding import default_rules, tree_shardings
+from repro.train import optim, step as step_mod
+
+
+def _mesh_for(name: str):
+    if name == "multi":
+        return make_production_mesh(multi_pod=True)
+    return make_production_mesh(multi_pod=False)
+
+
+def _batch_shardings(cfg, shape, mesh, rules):
+    structs = step_mod.batch_struct(cfg, shape)
+    shardings = step_mod.batch_specs(cfg, mesh, rules, structs)
+    return structs, shardings
+
+
+def lower_cell(arch: str, shape_name: str, mesh_name: str,
+               knob_table: str = "baseline", *, unroll: bool = False):
+    """Lower + compile one dry-run cell; returns the record dict.
+
+    unroll=True unrolls every scan so XLA's cost_analysis counts each
+    layer/microbatch/chunk iteration (a while body is otherwise counted
+    once — see repro.models.scanner).  Memory analysis should be read from
+    the rolled (unroll=False) pass: unrolling forgoes loop buffer reuse.
+    """
+    from repro.models import scanner
+    scanner.set_unroll(unroll)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kn = knobs_mod.get(knob_table, arch, shape_name, mesh_name)
+    cfg = kn.apply(cfg)
+    rules = default_rules(**(kn.rules or {}))
+    mesh = _mesh_for(mesh_name)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "knobs": knob_table, "kind": shape.kind,
+        "devices": int(len(mesh.devices.flatten())),
+    }
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt = optim.OptConfig(moment_dtype=cfg.opt_moment_dtype)
+        state_structs, state_shardings = step_mod.state_shardings(
+            cfg, opt, mesh, rules)
+        batch_structs, batch_shardings = _batch_shardings(
+            cfg, shape, mesh, rules)
+        fn = step_mod.make_train_step(cfg, mesh, rules, opt,
+                                      num_microbatches=kn.num_microbatches)
+        jitted = jax.jit(fn,
+                         in_shardings=(state_shardings, batch_shardings),
+                         out_shardings=(state_shardings, None),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state_structs, batch_structs)
+    elif shape.kind == "prefill":
+        params, pspecs = step_mod.serve_param_structs(cfg)
+        pshard = tree_shardings(mesh, rules, params, pspecs)
+        batch_structs, batch_shardings = _batch_shardings(
+            cfg, shape, mesh, rules)
+        batch_structs.pop("labels")
+        batch_shardings.pop("labels")
+        fn = step_mod.make_prefill_step(cfg, mesh, rules)
+        cache_structs, cache_specs = model_api.init_cache(
+            cfg, shape.global_batch, shape.seq_len)
+        cache_shard = tree_shardings(mesh, rules, cache_structs, cache_specs)
+        jitted = jax.jit(fn, in_shardings=(pshard, batch_shardings),
+                         out_shardings=(None, cache_shard))
+        lowered = jitted.lower(params, batch_structs)
+    else:  # decode
+        params, pspecs = step_mod.serve_param_structs(cfg)
+        pshard = tree_shardings(mesh, rules, params, pspecs)
+        cache_structs, cache_specs = model_api.init_cache(
+            cfg, shape.global_batch, shape.seq_len)
+        cache_shard = tree_shardings(mesh, rules, cache_structs, cache_specs)
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = step_mod.make_decode_step(cfg, mesh, rules)
+        jitted = jax.jit(fn,
+                         in_shardings=(pshard, cache_shard, None, None),
+                         out_shardings=(None, cache_shard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params, cache_structs, tok, pos)
+
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_bytes_est": int(ma.argument_size_in_bytes
+                              + ma.output_size_in_bytes
+                              + ma.temp_size_in_bytes
+                              - ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    # cost_analysis counts while bodies ONCE (verified in tests); the
+    # loop-aware text model is authoritative for the roofline terms.
+    rec["cost_hlo_body_once"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+    text = compiled.as_text()
+    tc = roofline.text_costs(text)
+    flops = float(tc["flops"])
+    nbytes = float(tc["bytes"])
+    rec["cost"] = {"flops_per_device": flops, "bytes_per_device": nbytes,
+                   "source": "text_costs(loop-aware)"}
+
+    colls = roofline.parse_collectives(text)
+    rec["collectives"] = roofline.collective_summary(colls)
+    rec["roofline"] = roofline.roofline_terms(flops, nbytes, colls)
+    rec["unrolled_costs"] = unroll
+    rec["while_trips"] = roofline.while_trip_counts(text)
+    scanner.set_unroll(False)
+    mf = roofline.model_flops(get_config(arch), SHAPES[shape_name])
+    rec["model_flops_total"] = mf
+    dev = rec["devices"]
+    rec["useful_flops_ratio"] = (mf / dev) / flops if flops else 0.0
+    # top-10 largest collectives, for the perf log
+    top = sorted(colls, key=lambda c: -c.wire_bytes)[:10]
+    rec["top_collectives"] = [
+        {"op": c.op, "bytes": c.result_bytes, "group": c.group_size,
+         "pod": c.crosses_pod, "wire": int(c.wire_bytes)} for c in top]
+    del compiled, lowered, text
+    gc.collect()
+    return rec
+
+
+def iter_cells(mesh_names):
+    for arch, cfg in ARCHS.items():
+        for shape_name, shape in SHAPES.items():
+            run, why = shape_applicable(cfg, shape)
+            for mesh_name in mesh_names:
+                yield arch, shape_name, mesh_name, run, why
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--knobs", default="baseline",
+                    choices=["baseline", "tuned"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose result JSON already exists")
+    args = ap.parse_args()
+
+    mesh_names = {"both": ["single", "multi"], "single": ["single"],
+                  "multi": ["multi"]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = [(a, s, m, run, why) for a, s, m, run, why in iter_cells(mesh_names)
+             if (args.arch in (None, a)) and (args.shape in (None, s))]
+    if args.list:
+        for c in cells:
+            print(*c)
+        return 0
+
+    failures = 0
+    for arch, shape_name, mesh_name, run, why in cells:
+        tag = f"{arch}__{shape_name}__{mesh_name}__{args.knobs}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"HAVE {tag}", flush=True)
+            continue
+        if not run:
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                   "knobs": args.knobs, "skipped": True, "reason": why}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"SKIP {tag}: {why}", flush=True)
+            continue
+        try:
+            rec = lower_cell(arch, shape_name, mesh_name, args.knobs)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            r = rec["roofline"]
+            print(f"OK   {tag} compile={rec['compile_s']}s "
+                  f"flops/dev={rec['cost']['flops_per_device']:.3e} "
+                  f"bottleneck={r['bottleneck']} "
+                  f"frac={r['roofline_fraction']:.3f}", flush=True)
+        except Exception as e:  # noqa: BLE001 - record and continue
+            failures += 1
+            with open(path + ".err", "w") as f:
+                f.write(traceback.format_exc())
+            print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Functions, not module-level constants: importing this module never touches
+jax device state.  The dry-run process sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before importing
+jax so 512 placeholder CPU devices exist; smoke tests and benchmarks see
+the default single device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices this host actually has."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+# Hardware model used for the roofline terms (TPU v5e-like; see DESIGN.md §7)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (one direction)
+ICI_LINKS_PER_AXIS = 1          # torus: 1 link per mesh-axis direction
+DCN_BW = 25e9                   # bytes/s per chip, pod axis (multi-pod)

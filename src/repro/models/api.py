@@ -1,0 +1,607 @@
+"""Top-level model API: train_loss / prefill / decode_step / init_cache.
+
+All functions are pure and pjit-friendly; layer stacks run under lax.scan
+with jax.checkpoint (remat) for the large archs, unrolled for the small or
+heterogeneous ones (gemma3 local/global, zamba2 shared-attention hybrid).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import scanner
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.common import cross_entropy, rms_norm, rope_table
+from repro.sharding import ShardingCtx
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _sinusoid(seq: int, d: int):
+    # traced (not a baked HLO constant: at 32k x d this would bloat the IR)
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2.0 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed(cfg, params, tokens, dtype):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    return x
+
+
+def _unembed(cfg, params, h):
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, w.astype(h.dtype))
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence backbone (train & prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, ctx: ShardingCtx, params, tokens, *,
+            collect: bool, patches=None, frames=None, chunked=False):
+    """Returns (hidden (B,S,d) post-final-norm, cache pytree or None)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    p = lm._cast(params, dtype)
+    b, s = tokens.shape
+    x = _embed(cfg, p, tokens, dtype)
+    x = ctx.hint(x, "batch", "sp_seq", None)
+    fam = cfg.family
+
+    rope = rope_table(s, cfg.head_dim, cfg.rope_theta) if cfg.num_heads else None
+    win = cfg.sliding_window
+
+    def slice_window(kv, w):
+        if w and s > w:
+            k, v = kv
+            return (k[..., s - w:, :], v[..., s - w:, :],
+                    jnp.arange(s - w, s, dtype=jnp.int32))
+        k, v = kv
+        return (k, v, jnp.arange(s, dtype=jnp.int32))
+
+    cache: Any = None
+
+    if fam in ("dense", "moe") and cfg.scan_layers:
+        plan = lm.layer_plan(cfg)
+        kinds = sorted(set(plan))
+
+        def block(kind, x, lp):
+            x, kv = lm.attn_block(cfg, ctx, lp["attn"], x, rope=rope,
+                                  window=win, chunked=chunked, return_kv=True)
+            kv = (ctx.hint(kv[0], "batch", "kv_heads", "kv_seq", "head"),
+                  ctx.hint(kv[1], "batch", "kv_heads", "kv_seq", "head"))
+            if kind == "moe":
+                x = lm.moe_block(cfg, ctx, lp["moe"], x)
+            else:
+                x = lm.mlp_block(cfg, ctx, lp["mlp"], x)
+            return x, kv
+
+        if len(kinds) == 1:
+            body = _maybe_remat(cfg, functools.partial(block, plan[0]))
+
+            def scan_body(carry, lp):
+                y, kv = body(carry, lp)
+                return y, (kv if collect else None)
+
+            x, kvs = scanner.scan(scan_body, x, p["stack"])
+            if collect:
+                k, v, slot = slice_window(
+                    (kvs[0], kvs[1]), win)
+                cache = {"k": k, "v": v, "slot_pos": slot}
+        else:  # llama4: (dense, moe) groups
+            body_a = _maybe_remat(cfg, functools.partial(block, plan[0]))
+            body_b = _maybe_remat(cfg, functools.partial(block, plan[1]))
+
+            def scan_body(carry, lps):
+                pa, pb = lps
+                y, kv_a = body_a(carry, pa)
+                y, kv_b = body_b(y, pb)
+                return y, ((kv_a, kv_b) if collect else None)
+
+            x, kvs = scanner.scan(scan_body, x, (p["stack_a"], p["stack_b"]))
+            if collect:
+                ka, va, slot = slice_window(kvs[0], win)
+                kb, vb, _ = slice_window(kvs[1], win)
+                cache = {"k_a": ka, "v_a": va, "k_b": kb, "v_b": vb,
+                         "slot_pos": slot}
+
+    elif fam == "dense" and not cfg.scan_layers:  # gemma3: unrolled 5:1
+        tables = {}
+        layer_caches = []
+        for i, lp in enumerate(p["layers"]):
+            w_i = lm.layer_window(cfg, i)
+            th = lm.layer_theta(cfg, i)
+            if th not in tables:
+                tables[th] = rope_table(s, cfg.head_dim, th)
+
+            def one(x, lp=lp, w_i=w_i, th=th):
+                return lm.attn_block(cfg, ctx, lp["attn"], x, rope=tables[th],
+                                     window=w_i, chunked=chunked,
+                                     return_kv=True)
+
+            x, kv = _maybe_remat(cfg, one)(x)
+            x = _maybe_remat(cfg, lambda x, lp=lp: lm.mlp_block(
+                cfg, ctx, lp["mlp"], x))(x)
+            if collect:
+                k, v, slot = slice_window(kv, w_i)
+                layer_caches.append({"k": k, "v": v, "slot_pos": slot})
+        if collect:
+            cache = layer_caches
+
+    elif fam == "ssm":
+        body = _maybe_remat(
+            cfg, lambda x, lp: lm.mamba_block(cfg, ctx, lp["mamba"], x,
+                                              return_state=collect))
+
+        def scan_body(carry, lp):
+            out = body(carry, lp)
+            if collect:
+                return out[0], out[1]
+            return out, None
+
+        x, states = scanner.scan(scan_body, x, p["stack"])
+        if collect:
+            cache = states
+
+    elif fam == "hybrid":
+        shared = p["shared"]
+        layer_caches = []
+        attn_caches = []
+        for i, lp in enumerate(p["layers"]):
+            out = _maybe_remat(
+                cfg, lambda x, lp=lp: lm.mamba_block(
+                    cfg, ctx, lp["mamba"], x, return_state=collect))(x)
+            if collect:
+                x, st = out
+                layer_caches.append(st)
+            else:
+                x = out
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                x, kv = _maybe_remat(
+                    cfg, lambda x: lm.attn_block(
+                        cfg, ctx, shared["attn"], x, rope=rope, window=0,
+                        chunked=chunked, return_kv=True))(x)
+                x = _maybe_remat(cfg, lambda x: lm.mlp_block(
+                    cfg, ctx, shared["mlp"], x))(x)
+                if collect:
+                    k, v, slot = slice_window(kv, 0)
+                    attn_caches.append({"k": k, "v": v, "slot_pos": slot})
+        if collect:
+            cache = {"mamba": layer_caches, "attn": attn_caches}
+
+    elif fam == "encdec":
+        enc = p["encoder"]
+        eseq = frames.shape[1]
+        f = frames.astype(dtype) + _sinusoid(eseq, cfg.d_model).astype(dtype)
+        f = ctx.hint(f, "batch", "sp_seq", None)
+
+        def enc_body(carry, lp):
+            y = lm.attn_block(cfg, ctx, lp["attn"], carry, rope=None,
+                              window=0, causal=False, chunked=False)
+            y = lm.mlp_block(cfg, ctx, lp["mlp"], y)
+            return y, None
+
+        f, _ = scanner.scan(_maybe_remat(cfg, enc_body), f, enc["stack"])
+        enc_out = rms_norm(f, enc["norm"], cfg.norm_eps)
+
+        x = x + _sinusoid(s, cfg.d_model).astype(dtype)
+
+        def dec_body(carry, lp):
+            y, kv = lm.attn_block(cfg, ctx, lp["attn"], carry, rope=None,
+                                  window=0, chunked=chunked, return_kv=True)
+            y, xkv = lm.attn_block(cfg, ctx, lp["xattn"], y, rope=None,
+                                   kv_source=enc_out, return_kv=True)
+            y = lm.mlp_block(cfg, ctx, lp["mlp"], y)
+            out = ((kv, xkv) if collect else None)
+            return y, out
+
+        x, kvs = scanner.scan(_maybe_remat(cfg, dec_body), x, p["stack"])
+        if collect:
+            (k, v), (xk, xv) = kvs
+            cache = {"k": k, "v": v,
+                     "slot_pos": jnp.arange(s, dtype=jnp.int32),
+                     "cross_k": xk, "cross_v": xv}
+
+    elif fam == "vlm":
+        img = patches.astype(dtype)
+        img = ctx.hint(img, "batch", None, None)
+
+        def self_body(carry, lp):
+            y, kv = lm.attn_block(cfg, ctx, lp["attn"], carry, rope=rope,
+                                  window=win, chunked=chunked, return_kv=True)
+            y = lm.mlp_block(cfg, ctx, lp["mlp"], y)
+            kv = (ctx.hint(kv[0], "batch", "kv_heads", "kv_seq", "head"),
+                  ctx.hint(kv[1], "batch", "kv_heads", "kv_seq", "head"))
+            return y, (kv if collect else None)
+
+        def group_body(carry, lps):
+            ps_self, ps_cross = lps
+            y, kvs = scanner.scan(self_body, carry, ps_self)
+            y, xkv = lm.attn_block(cfg, ctx, ps_cross["attn"], y, rope=None,
+                                   kv_source=img, gated=True, return_kv=True)
+            y = lm.mlp_block(cfg, ctx, ps_cross["mlp"], y)
+            return y, ((kvs, xkv) if collect else None)
+
+        x, ys = scanner.scan(_maybe_remat(cfg, group_body), x,
+                             (p["stack_self"], p["stack_cross"]))
+        if collect:
+            (k, v), (xk, xv) = ys
+            cache = {"k": k, "v": v,
+                     "slot_pos": jnp.arange(s, dtype=jnp.int32),
+                     "cross_k": xk, "cross_v": xv}
+    else:
+        raise ValueError(fam)
+
+    h = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill / decode entry points
+# ---------------------------------------------------------------------------
+
+
+def train_loss(cfg, ctx, params, batch):
+    h, _ = forward(cfg, ctx, params, batch["tokens"], collect=False,
+                   patches=batch.get("patches"), frames=batch.get("frames"),
+                   chunked=cfg.train_chunked)
+    logits = _unembed(cfg, params, h)
+    logits = ctx.hint(logits, "batch", "seq", "vocab")
+    return cross_entropy(logits, batch["labels"])
+
+
+def prefill(cfg, ctx, params, batch):
+    chunked = batch["tokens"].shape[1] >= 8192
+    h, cache = forward(cfg, ctx, params, batch["tokens"], collect=True,
+                       patches=batch.get("patches"),
+                       frames=batch.get("frames"), chunked=chunked)
+    last = h[:, -1:, :]
+    logits = _unembed(cfg, params, last)[:, 0]
+    logits = ctx.hint(logits, "batch", "vocab")
+    return logits, cache
+
+
+def decode_step(cfg, ctx, params, cache, tokens, pos):
+    """tokens (B, 1) int32; pos scalar int32 (uniform batch position)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    p = lm._cast(params, dtype)
+    b = tokens.shape[0]
+    x = _embed(cfg, p, tokens[:, 0], dtype)[:, None, :]
+    fam = cfg.family
+    win = cfg.sliding_window
+
+    if fam in ("dense", "moe") and cfg.scan_layers:
+        plan = lm.layer_plan(cfg)
+        kinds = sorted(set(plan))
+
+        def block(kind, x, lp, c):
+            x, nc = lm.attn_block_decode(cfg, ctx, lp["attn"], x, c, pos,
+                                         window=win)
+            if kind == "moe":
+                x = lm.moe_block_decode(cfg, ctx, lp["moe"], x)
+            else:
+                x = lm.mlp_block_decode(cfg, ctx, lp["mlp"], x)
+            return x, nc
+
+        if len(kinds) == 1:
+            def scan_body(carry, xs):
+                lp, ck, cv = xs
+                c = {"k": ck, "v": cv, "slot_pos": cache["slot_pos"]}
+                y, nc = block(plan[0], carry, lp, c)
+                return y, (nc["k"], nc["v"])
+
+            x, (ks, vs) = scanner.scan(
+                scan_body, x, (p["stack"], cache["k"], cache["v"]))
+            size = cache["k"].shape[3]
+            slot = jnp.where(jnp.asarray(win, jnp.int32) > 0, pos % size,
+                             jnp.minimum(pos, size - 1))
+            new_slot = jnp.where(jnp.arange(size) == slot, pos,
+                                 cache["slot_pos"])
+            cache = {"k": ks, "v": vs, "slot_pos": new_slot}
+        else:
+            def scan_body(carry, xs):
+                pa, pb, ka, va, kb, vb = xs
+                y, nca = block(plan[0], carry,
+                               pa, {"k": ka, "v": va,
+                                    "slot_pos": cache["slot_pos"]})
+                y, ncb = block(plan[1], y,
+                               pb, {"k": kb, "v": vb,
+                                    "slot_pos": cache["slot_pos"]})
+                return y, (nca["k"], nca["v"], ncb["k"], ncb["v"])
+
+            x, (ka, va, kb, vb) = scanner.scan(
+                scan_body, x, (p["stack_a"], p["stack_b"],
+                               cache["k_a"], cache["v_a"],
+                               cache["k_b"], cache["v_b"]))
+            size = cache["k_a"].shape[3]
+            slot = jnp.where(jnp.asarray(win, jnp.int32) > 0, pos % size,
+                             jnp.minimum(pos, size - 1))
+            new_slot = jnp.where(jnp.arange(size) == slot, pos,
+                                 cache["slot_pos"])
+            cache = {"k_a": ka, "v_a": va, "k_b": kb, "v_b": vb,
+                     "slot_pos": new_slot}
+
+    elif fam == "dense" and not cfg.scan_layers:
+        new_caches = []
+        for i, (lp, c) in enumerate(zip(p["layers"], cache)):
+            w_i = lm.layer_window(cfg, i)
+            th = lm.layer_theta(cfg, i)
+            x, nc = lm.attn_block_decode(cfg, ctx, lp["attn"], x, c, pos,
+                                         window=w_i, theta=th)
+            x = lm.mlp_block_decode(cfg, ctx, lp["mlp"], x)
+            new_caches.append(nc)
+        cache = new_caches
+
+    elif fam == "ssm":
+        def scan_body(carry, xs):
+            lp, c = xs
+            y, nc = lm.mamba_block_decode(cfg, ctx, lp["mamba"], carry, c)
+            return y, nc
+
+        x, cache = scanner.scan(scan_body, x, (p["stack"], cache))
+
+    elif fam == "hybrid":
+        shared = p["shared"]
+        new_m, new_a = [], []
+        ai = 0
+        for i, (lp, c) in enumerate(zip(p["layers"], cache["mamba"])):
+            x, nc = lm.mamba_block_decode(cfg, ctx, lp["mamba"], x, c)
+            new_m.append(nc)
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0 \
+                    and ai < len(cache["attn"]):
+                x, nac = lm.attn_block_decode(cfg, ctx, shared["attn"], x,
+                                              cache["attn"][ai], pos, window=0)
+                x = lm.mlp_block_decode(cfg, ctx, shared["mlp"], x)
+                new_a.append(nac)
+                ai += 1
+        cache = {"mamba": new_m, "attn": new_a}
+
+    elif fam in ("encdec", "vlm"):
+        if fam == "encdec":
+            # sinusoidal absolute positional encoding at `pos` (no RoPE)
+            x = x + _pos_at(pos, cfg.d_model).astype(dtype)
+
+            def scan_body(carry, xs):
+                lp, ck, cv, xk, xv = xs
+                c = {"k": ck, "v": cv, "slot_pos": cache["slot_pos"]}
+                y, nc = lm.attn_block_decode(cfg, ctx, lp["attn"], carry, c,
+                                             pos, window=0, use_rope=False)
+                y, _ = lm.attn_block_decode(cfg, ctx, lp["xattn"], y, None,
+                                            pos, cross_cache={"k": xk,
+                                                              "v": xv})
+                y = lm.mlp_block_decode(cfg, ctx, lp["mlp"], y)
+                return y, (nc["k"], nc["v"])
+
+            x, (ks, vs) = scanner.scan(
+                scan_body, x, (p["stack"], cache["k"], cache["v"],
+                               cache["cross_k"], cache["cross_v"]))
+        else:  # vlm: groups of 4 self + 1 cross
+            def self_body(carry, xs):
+                lp, ck, cv = xs
+                c = {"k": ck, "v": cv, "slot_pos": cache["slot_pos"]}
+                y, nc = lm.attn_block_decode(cfg, ctx, lp["attn"], carry, c,
+                                             pos, window=win)
+                y = lm.mlp_block_decode(cfg, ctx, lp["mlp"], y)
+                return y, (nc["k"], nc["v"])
+
+            def group_body(carry, xs):
+                ps_self, ps_cross, ck, cv, xk, xv = xs
+                y, kv = scanner.scan(self_body, carry, (ps_self, ck, cv))
+                y, _ = lm.attn_block_decode(cfg, ctx, ps_cross["attn"], y,
+                                            None, pos,
+                                            cross_cache={"k": xk, "v": xv},
+                                            gated=True)
+                y = lm.mlp_block_decode(cfg, ctx, ps_cross["mlp"], y)
+                return y, kv
+
+            x, (ks, vs) = scanner.scan(
+                group_body, x, (p["stack_self"], p["stack_cross"],
+                                cache["k"], cache["v"],
+                                cache["cross_k"], cache["cross_v"]))
+        size = cache["k"].shape[-2]
+        new_slot = jnp.where(jnp.arange(size) == jnp.minimum(pos, size - 1),
+                             pos, cache["slot_pos"])
+        cache = dict(cache, k=ks, v=vs, slot_pos=new_slot)
+    else:
+        raise ValueError(fam)
+
+    h = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, p, h)[:, 0]
+    logits = ctx.hint(logits, "batch", "vocab")
+    return logits, cache
+
+
+def _pos_at(pos, d):
+    i = jnp.arange(d // 2)
+    ang = pos.astype(jnp.float32) / jnp.power(10_000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def pad_cache(cache, headroom: int):
+    """Add decode headroom to the KV caches collected by ``prefill``.
+
+    Prefill emits exactly prompt-length caches; decoding N new tokens needs
+    N free slots (``decode_attention`` masks them via slot_pos = -1 until
+    written).  Applies to every {k*, v*, slot_pos} group in the cache
+    pytree; cross-attention caches (fixed source length) and SSM states
+    (no slots) are untouched.  Ring (sliding-window) caches must NOT be
+    padded — their slot arithmetic is pos % size with size == window; the
+    serving engine only pads full-attention caches.
+    """
+    if headroom <= 0:
+        return cache
+    if isinstance(cache, list):
+        return [pad_cache(c, headroom) for c in cache]
+    if not isinstance(cache, dict):
+        return cache
+    if "slot_pos" not in cache:
+        return {k: pad_cache(v, headroom) for k, v in cache.items()}
+    out = {}
+    for k, v in cache.items():
+        if k == "slot_pos":
+            out[k] = jnp.pad(v, (0, headroom), constant_values=-1)
+        elif (k.startswith("k") or k.startswith("v")) \
+                and not k.startswith(("cross", "k_cross", "v_cross")):
+            pad = [(0, 0)] * v.ndim
+            pad[-2] = (0, headroom)
+            out[k] = jnp.pad(v, pad)
+        else:
+            out[k] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (decode dry-run + real decode)
+# ---------------------------------------------------------------------------
+
+
+def _kv_struct(cfg, lead, batch, size, concrete):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    shape_k = (*lead, batch, cfg.num_kv_heads, size, cfg.head_dim)
+    spec = ("layers",) * len(lead) + ("batch", "kv_heads", "kv_seq", "head")
+    if concrete:
+        return jnp.zeros(shape_k, dtype), spec
+    return jax.ShapeDtypeStruct(shape_k, dtype), spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               concrete: bool = False):
+    """Build the decode cache pytree and its logical-spec pytree."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    fam = cfg.family
+    win = cfg.sliding_window
+
+    def arr(shape, spec, dt=dtype, fill=0):
+        if concrete:
+            return (jnp.full(shape, fill, dt), spec)
+        return (jax.ShapeDtypeStruct(shape, dt), spec)
+
+    def slot(size):
+        if concrete:
+            init = jnp.where(jnp.arange(size) < seq_len - 1,
+                             jnp.arange(size), -1).astype(jnp.int32)
+            return (init, ("kv_seq",))
+        return (jax.ShapeDtypeStruct((size,), jnp.int32), ("kv_seq",))
+
+    def kv_size(w):
+        return min(w, seq_len) if w > 0 else seq_len
+
+    if fam in ("dense", "moe") and cfg.scan_layers:
+        plan = lm.layer_plan(cfg)
+        kinds = sorted(set(plan))
+        size = kv_size(win)
+        if len(kinds) == 1:
+            tree = {
+                "k": _kv_struct(cfg, (cfg.num_layers,), batch, size, concrete),
+                "v": _kv_struct(cfg, (cfg.num_layers,), batch, size, concrete),
+                "slot_pos": slot(size),
+            }
+        else:
+            n = cfg.num_layers // 2
+            tree = {
+                "k_a": _kv_struct(cfg, (n,), batch, size, concrete),
+                "v_a": _kv_struct(cfg, (n,), batch, size, concrete),
+                "k_b": _kv_struct(cfg, (n,), batch, size, concrete),
+                "v_b": _kv_struct(cfg, (n,), batch, size, concrete),
+                "slot_pos": slot(size),
+            }
+    elif fam == "dense":
+        tree = []
+        for i in range(cfg.num_layers):
+            size = kv_size(lm.layer_window(cfg, i))
+            tree.append({
+                "k": _kv_struct(cfg, (), batch, size, concrete),
+                "v": _kv_struct(cfg, (), batch, size, concrete),
+                "slot_pos": slot(size),
+            })
+    elif fam == "ssm":
+        tree = _ssm_cache(cfg, cfg.num_layers, batch, concrete)
+    elif fam == "hybrid":
+        per = _ssm_cache(cfg, None, batch, concrete)
+        n_attn = cfg.num_layers // cfg.attn_every
+        tree = {
+            "mamba": [dict(per) for _ in range(cfg.num_layers)],
+            "attn": [{
+                "k": _kv_struct(cfg, (), batch, kv_size(0), concrete),
+                "v": _kv_struct(cfg, (), batch, kv_size(0), concrete),
+                "slot_pos": slot(kv_size(0)),
+            } for _ in range(n_attn)],
+        }
+    elif fam == "encdec":
+        l = cfg.num_layers
+        tree = {
+            "k": _kv_struct(cfg, (l,), batch, seq_len, concrete),
+            "v": _kv_struct(cfg, (l,), batch, seq_len, concrete),
+            "slot_pos": slot(seq_len),
+            "cross_k": _kv_struct(cfg, (l,), batch, cfg.encoder_seq, concrete),
+            "cross_v": _kv_struct(cfg, (l,), batch, cfg.encoder_seq, concrete),
+        }
+    elif fam == "vlm":
+        ng = cfg.num_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every - 1
+        tree = {
+            "k": _kv_struct(cfg, (ng, per), batch, seq_len, concrete),
+            "v": _kv_struct(cfg, (ng, per), batch, seq_len, concrete),
+            "slot_pos": slot(seq_len),
+            "cross_k": _kv_struct(cfg, (ng,), batch, cfg.num_image_tokens,
+                                  concrete),
+            "cross_v": _kv_struct(cfg, (ng,), batch, cfg.num_image_tokens,
+                                  concrete),
+        }
+    else:
+        raise ValueError(fam)
+
+    return _split(tree)
+
+
+def _ssm_cache(cfg, layers, batch, concrete):
+    f32 = jnp.float32
+    dtype = jnp.dtype(cfg.compute_dtype)
+    lead = (layers,) if layers else ()
+    lspec = ("layers",) if layers else ()
+    w = cfg.ssm_conv_width
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+
+    def arr(shape, spec, dt):
+        if concrete:
+            return (jnp.zeros(shape, dt), spec)
+        return (jax.ShapeDtypeStruct(shape, dt), spec)
+
+    return {
+        "state": arr((*lead, batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                      cfg.ssm_state),
+                     lspec + ("batch", "ssm_heads", None, None), f32),
+        "conv_x": arr((*lead, batch, w - 1, cfg.d_inner),
+                      lspec + ("batch", None, "mlp"), dtype),
+        "conv_B": arr((*lead, batch, w - 1, gn),
+                      lspec + ("batch", None, None), dtype),
+        "conv_C": arr((*lead, batch, w - 1, gn),
+                      lspec + ("batch", None, None), dtype),
+    }
+
+
+def _split(tree):
+    """Split nested {name: (leaf, spec)} (with lists) into two trees."""
+    if isinstance(tree, dict):
+        a, b = {}, {}
+        for k, v in tree.items():
+            a[k], b[k] = _split(v)
+        return a, b
+    if isinstance(tree, list):
+        pairs = [_split(v) for v in tree]
+        return [p[0] for p in pairs], [p[1] for p in pairs]
+    leaf, spec = tree
+    return leaf, spec

@@ -1,0 +1,144 @@
+"""Attention primitives: full masked, flash-chunked (prefill), and decode.
+
+Conventions:
+  q          (B, Sq, KV, G, hd)   G = query heads per KV head (GQA groups)
+  k, v       (B, Skv, KV, hd)
+  caches     (B, KV, S, hd)       seq-dim laid out for context sharding
+  positions  int32; window <= 0 means full attention
+
+All softmax math is fp32.  Under pjit, attention over a context-sharded
+cache turns into flash-decode automatically: the max/sum reductions over the
+sharded seq dim lower to all-reduces (verified in the dry-run HLO).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import scanner
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, kv_pos, window, causal: bool):
+    """(Sq, Skv) additive bias from positions; window is a traced scalar."""
+    q = q_pos[:, None].astype(jnp.int32)
+    k = kv_pos[None, :].astype(jnp.int32)
+    valid = jnp.ones(q.shape[:1] + k.shape[1:], dtype=bool)
+    if causal:
+        valid = k <= q
+    w = jnp.asarray(window, jnp.int32)
+    in_window = jnp.where(w > 0, (q - k) < w, True)
+    valid = valid & in_window
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def split_gqa(q, num_kv):
+    """(B, S, H, hd) -> (B, S, KV, G, hd)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def merge_gqa(o):
+    b, s, kv, g, d = o.shape
+    return o.reshape(b, s, kv * g, d)
+
+
+def full_attention(q, k, v, q_pos, kv_pos, *, window=0, causal=True, scale,
+                   score_hint=None):
+    """Masked softmax attention, materialized scores.  Used when Sq is small
+    enough (training at 4k; smoke tests).
+
+    score_hint: optional callback hinting the (B, KV*G, Sq, Skv) score
+    layout — with GQA the KV dim alone often cannot shard a 16-way model
+    axis (e.g. 8 kv heads), leaving the score tensor replicated; merging
+    (KV, G) lets the full head product shard (§Perf tuned_hints)."""
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k, precision=jax.lax.Precision.DEFAULT)
+    s = s.astype(jnp.float32) * scale
+    s = s + _mask_bias(q_pos, kv_pos, window, causal)[None, None, None]
+    if score_hint is not None:
+        b_, kvh, g, sq_, skv_ = s.shape
+        s = score_hint(s.reshape(b_, kvh * g, sq_, skv_)).reshape(s.shape)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    return o
+
+
+def chunked_attention(q, k, v, q_pos, kv_pos, *, window=0, causal=True,
+                      scale, chunk=1024, score_hint=None):
+    """Flash-style online-softmax attention, scanning KV chunks.
+
+    Bounds the transient score tensor to (B,KV,G,Sq,chunk); used for the
+    32k-prefill shapes.  Inference-only path (scan carries would bloat AD).
+    score_hint: see full_attention — applied per KV chunk.
+    """
+    b, skv, kv_h, hd = k.shape
+    sq = q.shape[1]
+    if skv % chunk:
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-(10 ** 9))
+        skv += pad
+    n = skv // chunk
+    g = q.shape[3]
+
+    kc = jnp.moveaxis(k.reshape(b, n, chunk, kv_h, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n, chunk, kv_h, hd), 1, 0)
+    pc = kv_pos.reshape(n, chunk)
+
+    m0 = jnp.full((b, kv_h, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv_h, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv_h, g, sq, hd), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, p_i = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_i).astype(jnp.float32) * scale
+        s = s + _mask_bias(q_pos, p_i, window, causal)[None, None, None]
+        if score_hint is not None:
+            bb, kvh, gg, sq_, ck = s.shape
+            s = score_hint(s.reshape(bb, kvh * gg, sq_, ck)).reshape(s.shape)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(v_i.dtype), v_i).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = scanner.scan(body, (m0, l0, a0), (kc, vc, pc))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(o, 3, 1).astype(q.dtype)  # (B,Sq,KV,G,hd)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, pos, *, window=0, scale):
+    """One-token attention over a cache.
+
+    q: (B, KV, G, hd); caches (B, KV, S, hd); slot_pos (S,) int32 giving the
+    absolute position stored in each slot (-1 = empty; ring buffers reuse
+    slots).  pos: scalar int32 current position (the query's position).
+    """
+    s = jnp.einsum("bkgd,bksd->bkgs", q, k_cache).astype(jnp.float32) * scale
+    w = jnp.asarray(window, jnp.int32)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    valid = valid & jnp.where(w > 0, (pos - slot_pos) < w, True)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o
+
+
+def cache_write(k_cache, v_cache, k_new, v_new, slot):
+    """Masked one-hot write of one token into slot ``slot`` (traced scalar).
+
+    SPMD-friendly on a seq-sharded cache: a pure elementwise select, no
+    dynamic-update-slice (which would force resharding of the cache).
+    k_new/v_new: (B, KV, hd).
+    """
+    s = k_cache.shape[2]
+    hit = (jax.lax.iota(jnp.int32, s) == slot)[None, None, :, None]
+    k_cache = jnp.where(hit, k_new[:, :, None, :].astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(hit, v_new[:, :, None, :].astype(v_cache.dtype), v_cache)
+    return k_cache, v_cache

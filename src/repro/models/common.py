@@ -1,0 +1,143 @@
+"""Shared model building blocks: init helpers, norms, RoPE, losses.
+
+Parameters are plain pytrees (nested dicts of arrays).  Every init function
+returns ``(params, specs)`` where ``specs`` mirrors ``params`` with leaves
+that are tuples of *logical* axis names (see repro.sharding).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def trunc_normal(key, shape, std, dtype):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+class Initializer:
+    """Accumulates (params, specs) pairs with a splitting PRNG key."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+
+    def split(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def dense(self, shape, axes, std=None):
+        fan_in = shape[0] if len(shape) else 1
+        if std is None:
+            std = 1.0 / np.sqrt(max(1, fan_in))
+        return trunc_normal(self.split(), shape, std, self.dtype), _ax(axes)
+
+    def embed(self, shape, axes, std=0.02):
+        return trunc_normal(self.split(), shape, std, self.dtype), _ax(axes)
+
+    def zeros(self, shape, axes):
+        return jnp.zeros(shape, self.dtype), _ax(axes)
+
+    def ones(self, shape, axes):
+        return jnp.ones(shape, self.dtype), _ax(axes)
+
+    def const(self, value, axes):
+        return jnp.asarray(value, self.dtype), _ax(axes)
+
+
+def _ax(axes):
+    return None if axes is None else tuple(axes)
+
+
+def split_tree(tree):
+    """Split a nested {name: (param, spec)} structure (dicts/lists) into
+    parallel (params, specs) structures."""
+    if isinstance(tree, dict):
+        params, specs = {}, {}
+        for name, value in tree.items():
+            params[name], specs[name] = split_tree(value)
+        return params, specs
+    if isinstance(tree, list):
+        pairs = [split_tree(v) for v in tree]
+        return [p[0] for p in pairs], [p[1] for p in pairs]
+    param, spec = tree
+    return param, spec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_inv_freq(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def rope_table(seq_len: int, head_dim: int, theta: float):
+    """(seq, head_dim/2) cos/sin tables, fp32."""
+    inv = rope_inv_freq(head_dim, theta)
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = jnp.einsum("s,d->sd", t, inv.astype(jnp.float32))
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_at(pos, head_dim: int, theta: float):
+    """cos/sin at integer positions ``pos`` (any shape) -> (*pos, head_dim/2)."""
+    inv = rope_inv_freq(head_dim, theta).astype(jnp.float32)
+    ang = pos.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (seq, head_dim/2) or
+    broadcastable (..., seq, head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, hd/2) -> broadcast over batch & heads
+        cos = cos[:, None, :]
+        sin = sin[:, None, :]
+    else:  # (..., S, hd/2): add heads axis
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / losses
+# ---------------------------------------------------------------------------
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def cross_entropy(logits, labels, ignore_index: int = -1):
+    """Mean CE over non-ignored positions.
+
+    logits: (B, S, V) (possibly vocab-sharded); labels: (B, S) int32.
+    Uses one-hot contraction (SPMD-friendly with a sharded vocab dim).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    picked = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - picked
+    mask = (labels != ignore_index).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,30 @@
+"""lax.scan wrapper with a process-wide unroll switch (analysis only).
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE regardless of
+its trip count (verified in tests/test_perfmodel.py::test_cost_analysis_
+counts_loops_once), so roofline terms derived from scan-based HLO
+under-count in-loop flops/bytes/collectives by the trip count.  The
+dry-run's cost pass therefore lowers with ``set_unroll(True)``: every scan
+in the model/train code fully unrolls and XLA's own numbers become exact.
+Execution paths (tests, examples, real training) keep scans rolled.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_UNROLL = False
+
+
+def set_unroll(value: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+def get_unroll() -> bool:
+    return _UNROLL
+
+
+def scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if _UNROLL else 1)

@@ -1,0 +1,142 @@
+"""Mamba2 / SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Chunked SSD algorithm: within a chunk the recurrence is computed as masked
+attention-like einsums (dual form); across chunks a lax.scan carries the
+(B, H, P, N) state.  State math in fp32.
+
+Shapes: x (B, L, H, P); dt (B, L, H); A (H,) (negative); B_, C (B, L, G, N)
+with G groups broadcast over heads.  Decode keeps (state, conv_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import scanner
+
+
+def segsum(x):
+    """Stable 'segment sum': cumulative sums over all (i<=j) segments.
+
+    x: (..., Q) -> (..., Q, Q) with out[..., i, j] = sum_{k in (j, i]} x[k]
+    for i >= j, -inf elsewhere.
+    """
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk: int, d_skip=None):
+    """Chunked SSD forward over a full sequence.
+
+    Returns (y, final_state).  x (B,L,H,P), dt (B,L,H) (softplus'd, >0),
+    a (H,) negative reals, b/c (B,L,G,N).
+    """
+    bsz, seqlen, nheads, pdim = x.shape
+    ngroups, nstate = b.shape[2], b.shape[3]
+    if seqlen % chunk:
+        raise ValueError(f"seq {seqlen} not divisible by chunk {chunk}")
+    nc = seqlen // chunk
+    rep = nheads // ngroups
+
+    f32 = jnp.float32
+    xd = (x.astype(f32) * dt.astype(f32)[..., None])          # dt-weighted input
+    da = dt.astype(f32) * a.astype(f32)[None, None, :]        # (B,L,H) log-decay
+
+    # reshape into chunks: (B, C, Q, ...)
+    def chunked(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xc, dac = chunked(xd), chunked(da)
+    bc = jnp.repeat(chunked(b.astype(f32)), rep, axis=3)      # (B,C,Q,H,N)
+    cc = jnp.repeat(chunked(c.astype(f32)), rep, axis=3)
+
+    # --- intra-chunk (dual / attention-like form) ---------------------------
+    seg = segsum(jnp.moveaxis(dac, -1, 2))                    # (B,C,H,Q,Q)
+    ell = jnp.exp(seg)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", cc, bc) * jnp.moveaxis(ell, 2, 2)
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", scores, xc)
+
+    # --- chunk states --------------------------------------------------------
+    cum = jnp.cumsum(dac, axis=2)                             # (B,C,Q,H)
+    total = cum[:, :, -1:, :]                                 # (B,C,1,H)
+    decay_to_end = jnp.exp(total - cum)                       # (B,C,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", bc, decay_to_end, xc)
+
+    # --- inter-chunk scan ----------------------------------------------------
+    chunk_decay = jnp.exp(total[:, :, 0, :])                  # (B,C,H)
+
+    def body(carry, xs):
+        st_in = carry                                         # (B,H,P,N)
+        s_c, dec = xs                                         # (B,H,P,N), (B,H)
+        st_out = st_in * dec[:, :, None, None] + s_c
+        return st_out, st_in
+
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    init = jnp.zeros((bsz, nheads, pdim, nstate), f32)
+    final_state, prev_states = scanner.scan(body, init, xs)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)             # (B,C,H,P,N)
+
+    # --- inter-chunk contribution -------------------------------------------
+    decay_from_start = jnp.exp(cum)                           # (B,C,Q,H)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                         cc, decay_from_start, prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, seqlen, nheads, pdim)
+    if d_skip is not None:
+        y = y + d_skip.astype(f32)[None, None, :, None] * x.astype(f32)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode(state, x_t, dt_t, a, b_t, c_t, *, d_skip=None):
+    """Single-token SSD update.
+
+    state (B,H,P,N) fp32; x_t (B,H,P); dt_t (B,H); b_t/c_t (B,G,N).
+    Returns (y_t (B,H,P), new_state).
+    """
+    f32 = jnp.float32
+    nheads = x_t.shape[1]
+    rep = nheads // b_t.shape[1]
+    b_t = jnp.repeat(b_t.astype(f32), rep, axis=1)            # (B,H,N)
+    c_t = jnp.repeat(c_t.astype(f32), rep, axis=1)
+    da = jnp.exp(dt_t.astype(f32) * a.astype(f32)[None, :])   # (B,H)
+    xd = x_t.astype(f32) * dt_t.astype(f32)[..., None]        # (B,H,P)
+    new_state = state * da[:, :, None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xd, b_t)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c_t)
+    if d_skip is not None:
+        y = y + d_skip.astype(f32)[None, :, None] * x_t.astype(f32)
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width w): y[t] = sum_i w[i] * x[t - (w-1) + i]
+# ---------------------------------------------------------------------------
+
+def causal_conv(x, weight, bias):
+    """x (B, L, C); weight (W, C); bias (C,).  Shift-and-add form."""
+    w = weight.shape[0]
+    f32 = jnp.float32
+    y = jnp.zeros_like(x, dtype=f32)
+    for i in range(w):
+        shift = w - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + xi.astype(f32) * weight[i].astype(f32)
+    y = y + bias.astype(f32)
+    return jax.nn.silu(y).astype(x.dtype)
+
+
+def causal_conv_decode(conv_state, x_t, weight, bias):
+    """conv_state (B, W-1, C) holds the previous W-1 inputs.
+
+    Returns (y_t (B, C), new_conv_state).
+    """
+    f32 = jnp.float32
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", full.astype(f32), weight.astype(f32))
+    y = jax.nn.silu(y + bias.astype(f32)).astype(x_t.dtype)
+    return y, full[:, 1:, :]

@@ -1,0 +1,3 @@
+from repro.serve.engine import Completion, Request, ServeEngine, init_serve_params
+
+__all__ = ["Completion", "Request", "ServeEngine", "init_serve_params"]

@@ -1,0 +1,186 @@
+"""CephFS shim: POSIX-ish files striped over RADOS objects, plus the
+DirectObjectAccess API that translates filenames to object IDs and invokes
+object-class methods on them (paper §2.2).
+
+Striping: file bytes are cut into ``stripe_unit``-sized objects named
+``<ino>.<%08x index>``; the MDS table maps path -> (ino, size, stripe_unit,
+object_count).  This is the metadata DirectObjectAccess leverages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable
+
+from repro.storage.objstore import ObjectNotFound, ObjectStore
+
+DEFAULT_STRIPE_UNIT = 4 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class Inode:
+    ino: int
+    path: str
+    size: int
+    stripe_unit: int
+    object_count: int
+    xattrs: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class CephFS:
+    """Filesystem facade over an ObjectStore."""
+
+    def __init__(self, store: ObjectStore,
+                 stripe_unit: int = DEFAULT_STRIPE_UNIT):
+        self.store = store
+        self.default_stripe_unit = stripe_unit
+        self._mds: dict[str, Inode] = {}
+        self._next_ino = 0x10000
+        self._lock = threading.Lock()
+
+    # -- namespace ----------------------------------------------------------
+    def _alloc_ino(self) -> int:
+        with self._lock:
+            self._next_ino += 1
+            return self._next_ino
+
+    def exists(self, path: str) -> bool:
+        return path in self._mds
+
+    def listdir(self, prefix: str) -> list[str]:
+        prefix = prefix.rstrip("/") + "/" if prefix else ""
+        return sorted(p for p in self._mds if p.startswith(prefix))
+
+    def stat(self, path: str) -> Inode:
+        if path not in self._mds:
+            raise FileNotFoundError(path)
+        return self._mds[path]
+
+    def unlink(self, path: str):
+        ino = self.stat(path)
+        for name in self.object_names(path):
+            self.store.delete(name)
+        del self._mds[path]
+
+    # -- data path ------------------------------------------------------------
+    def object_name(self, ino: Inode, idx: int) -> str:
+        return f"{ino.ino:x}.{idx:08x}"
+
+    def object_names(self, path: str) -> list[str]:
+        ino = self.stat(path)
+        return [self.object_name(ino, i) for i in range(ino.object_count)]
+
+    def write_file(self, path: str, data: bytes,
+                   stripe_unit: int | None = None,
+                   xattrs: dict | None = None) -> Inode:
+        su = stripe_unit or self.default_stripe_unit
+        if path in self._mds:
+            self.unlink(path)
+        ino = Inode(self._alloc_ino(), path, len(data), su,
+                    max(1, -(-len(data) // su)), dict(xattrs or {}))
+        for i in range(ino.object_count):
+            chunk = data[i * su:(i + 1) * su]
+            self.store.put(self.object_name(ino, i), chunk)
+        self._mds[path] = ino
+        return ino
+
+    def read_file(self, path: str) -> bytes:
+        ino = self.stat(path)
+        parts = []
+        for i in range(ino.object_count):
+            parts.append(self.store.get(self.object_name(ino, i)))
+        return b"".join(parts)[: ino.size]
+
+    def read_range(self, path: str, offset: int, length: int) -> bytes:
+        """Random-access read through the striping map."""
+        ino = self.stat(path)
+        su = ino.stripe_unit
+        end = min(offset + length, ino.size)
+        out = bytearray()
+        idx = offset // su
+        while offset < end:
+            within = offset - idx * su
+            take = min(su - within, end - offset)
+            out += self.store.get(self.object_name(ino, idx), within, take)
+            offset += take
+            idx += 1
+        return bytes(out)
+
+    def file_size(self, path: str) -> int:
+        return self.stat(path).size
+
+
+class FileSource:
+    """RandomAccessSource over a CephFS file (client-side scan path)."""
+
+    def __init__(self, fs: CephFS, path: str,
+                 on_read: Callable[[int], None] | None = None):
+        self.fs = fs
+        self.path = path
+        self._size = fs.file_size(path)
+        self._on_read = on_read
+
+    def read(self, offset: int, length: int) -> bytes:
+        data = self.fs.read_range(self.path, offset, length)
+        if self._on_read:
+            self._on_read(len(data))
+        return data
+
+    def size(self) -> int:
+        return self._size
+
+
+class DirectObjectAccess:
+    """Filename -> object IDs translation + cls invocation (paper §2.2).
+
+    This is the key mechanism: clients keep a filesystem view while
+    manipulating the underlying RADOS objects directly.
+    """
+
+    def __init__(self, fs: CephFS):
+        self.fs = fs
+        self.store = fs.store
+
+    def object_ids(self, path: str) -> list[str]:
+        return self.fs.object_names(path)
+
+    def stat_object(self, path: str, idx: int) -> int:
+        return self.store.stat(self.fs.object_names(path)[idx])
+
+    def call(self, path: str, idx: int, method: str,
+             payload: dict | None = None):
+        """Invoke an object-class method on the idx-th object of a file.
+        Returns (result_bytes, osd_id, elapsed_s)."""
+        names = self.fs.object_names(path)
+        return self.store.cls_call(names[idx], method, payload)
+
+    def call_last(self, path: str, method: str, payload=None):
+        names = self.fs.object_names(path)
+        return self.store.cls_call(names[-1], method, payload)
+
+    def call_hedged(self, path: str, idx: int, method: str,
+                    payload: dict | None = None, *,
+                    hedge_threshold_s: float = 0.05):
+        """Straggler-mitigated cls call: run on the primary; if its
+        (modeled) service time exceeds the hedge threshold, re-issue on the
+        next replica and keep the faster result.  Both executions burn
+        storage CPU — hedging trades duplicated work for tail latency,
+        exactly like Ceph read hedging against replicas.
+
+        Returns (result, osd_id, elapsed_s, hedged_bool)."""
+        name = self.fs.object_names(path)[idx]
+        result, osd_id, el = self.store.cls_call(name, method, payload)
+        if el <= hedge_threshold_s:
+            return result, osd_id, el, False
+        acting = self.store.acting_set(name)
+        backup = next((o for o in acting
+                       if o.osd_id != osd_id and not o.down
+                       and o.contains(name)), None)
+        if backup is None:
+            return result, osd_id, el, False
+        r2, id2, el2 = self.store.cls_call(name, method, payload,
+                                           prefer_osd=backup)
+        if el2 < el:
+            return r2, id2, el2, True
+        return result, osd_id, el, True

@@ -1,0 +1,279 @@
+"""RADOS-analogue programmable object store.
+
+Real data structures and byte-level semantics; the transport is in-process.
+Objects are placed on OSDs via PG hashing + a deterministic CRUSH-like
+replica permutation, written with 3-way replication, and read from the
+primary with automatic failover to replicas.  Every OSD tracks busy-time
+and byte counters — the inputs to the paper's Fig.-6 CPU-utilization
+reproduction — and supports failure + straggler injection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+import zlib
+from typing import Any, Callable
+
+DEFAULT_PG_NUM = 128
+
+
+class OSDDownError(RuntimeError):
+    pass
+
+
+class ObjectNotFound(KeyError):
+    pass
+
+
+@dataclasses.dataclass
+class OSDStats:
+    bytes_stored: int = 0
+    objects: int = 0
+    reads: int = 0
+    writes: int = 0
+    cls_calls: int = 0
+    busy_s: float = 0.0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    bytes_returned: int = 0
+
+
+class OSD:
+    """One storage node: object map + counters + failure/straggler knobs."""
+
+    def __init__(self, osd_id: int, threads: int = 8):
+        self.osd_id = osd_id
+        self.threads = threads
+        self._objects: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+        self.stats = OSDStats()
+        self.down = False
+        self.straggle_factor = 1.0   # >1 = this node is slow (hedging tests)
+
+    def _check(self):
+        if self.down:
+            raise OSDDownError(f"osd.{self.osd_id} is down")
+
+    def put(self, name: str, data: bytes):
+        self._check()
+        with self._lock:
+            old = self._objects.get(name)
+            self._objects[name] = bytes(data)
+            self.stats.writes += 1
+            self.stats.bytes_written += len(data)
+            self.stats.bytes_stored += len(data) - (len(old) if old else 0)
+            if old is None:
+                self.stats.objects += 1
+
+    def get(self, name: str, offset: int = 0, length: int | None = None
+            ) -> bytes:
+        self._check()
+        with self._lock:
+            if name not in self._objects:
+                raise ObjectNotFound(name)
+            data = self._objects[name]
+            self.stats.reads += 1
+            end = len(data) if length is None else offset + length
+            out = data[offset:end]
+            self.stats.bytes_read += len(out)
+            return out
+
+    def stat(self, name: str) -> int:
+        self._check()
+        with self._lock:
+            if name not in self._objects:
+                raise ObjectNotFound(name)
+            return len(self._objects[name])
+
+    def delete(self, name: str):
+        self._check()
+        with self._lock:
+            if name in self._objects:
+                data = self._objects.pop(name)
+                self.stats.bytes_stored -= len(data)
+                self.stats.objects -= 1
+
+    def contains(self, name: str) -> bool:
+        with self._lock:
+            return name in self._objects
+
+    def list_objects(self) -> list[str]:
+        with self._lock:
+            return sorted(self._objects)
+
+
+def _hash32(s: str) -> int:
+    return int.from_bytes(hashlib.blake2s(s.encode(),
+                                          digest_size=4).digest(), "little")
+
+
+class ObjectStore:
+    """PG-mapped, replicated object store over N OSDs."""
+
+    def __init__(self, num_osds: int, *, replication: int = 3,
+                 pg_num: int = DEFAULT_PG_NUM, threads_per_osd: int = 8):
+        if num_osds < 1:
+            raise ValueError("need at least one OSD")
+        self.osds = [OSD(i, threads_per_osd) for i in range(num_osds)]
+        self.replication = min(replication, num_osds)
+        self.pg_num = pg_num
+        self._cls: dict[str, Callable] = {}
+
+    # -- placement -------------------------------------------------------------
+    def pg_of(self, name: str) -> int:
+        return _hash32(name) % self.pg_num
+
+    def acting_set(self, name: str) -> list[OSD]:
+        """CRUSH-like: deterministic pseudo-random replica set for the PG."""
+        pg = self.pg_of(name)
+        n = len(self.osds)
+        seed = _hash32(f"pg:{pg}")
+        order = sorted(range(n), key=lambda i: _hash32(f"{seed}:{i}"))
+        return [self.osds[i] for i in order[: self.replication]]
+
+    def primary_of(self, name: str) -> OSD:
+        return self.acting_set(name)[0]
+
+    # -- I/O ---------------------------------------------------------------------
+    def put(self, name: str, data: bytes):
+        acting = self.acting_set(name)
+        wrote = 0
+        for osd in acting:
+            try:
+                osd.put(name, data)
+                wrote += 1
+            except OSDDownError:
+                continue
+        quorum = (self.replication // 2) + 1
+        if wrote < quorum:
+            raise OSDDownError(
+                f"write quorum failed for {name}: {wrote}/{quorum}")
+
+    def get(self, name: str, offset: int = 0, length: int | None = None
+            ) -> bytes:
+        err: Exception | None = None
+        for osd in self.acting_set(name):
+            try:
+                return osd.get(name, offset, length)
+            except OSDDownError as e:   # failover to replica
+                err = e
+            except ObjectNotFound as e:
+                err = e
+        raise err if err else ObjectNotFound(name)
+
+    def stat(self, name: str) -> int:
+        err: Exception | None = None
+        for osd in self.acting_set(name):
+            try:
+                return osd.stat(name)
+            except (OSDDownError, ObjectNotFound) as e:
+                err = e
+        raise err if err else ObjectNotFound(name)
+
+    def delete(self, name: str):
+        for osd in self.acting_set(name):
+            try:
+                osd.delete(name)
+            except OSDDownError:
+                pass
+
+    def exists(self, name: str) -> bool:
+        return any(o.contains(name) for o in self.acting_set(name))
+
+    def list_objects(self) -> list[str]:
+        names: set[str] = set()
+        for o in self.osds:
+            if not o.down:
+                names.update(o.list_objects())
+        return sorted(names)
+
+    # -- object classes (the Ceph ObjectClass SDK analogue) ---------------------
+    def register_cls(self, method: str, fn: Callable):
+        self._cls[method] = fn
+
+    def cls_call(self, name: str, method: str, payload: dict | None = None,
+                 *, prefer_osd: OSD | None = None) -> Any:
+        """Execute a registered object-class method ON the storage node
+        holding the object.  Returns (result, osd_id, elapsed_s)."""
+        if method not in self._cls:
+            raise KeyError(f"no object class method {method!r}")
+        acting = self.acting_set(name)
+        candidates = ([prefer_osd] if prefer_osd is not None else []) + acting
+        err: Exception | None = None
+        for osd in candidates:
+            if osd.down or not osd.contains(name):
+                continue
+            t0 = time.perf_counter()
+            try:
+                result = self._cls[method](ObjectHandle(osd, name),
+                                           payload or {})
+            except OSDDownError as e:
+                err = e
+                continue
+            el = (time.perf_counter() - t0) * osd.straggle_factor
+            osd.stats.cls_calls += 1
+            osd.stats.busy_s += el
+            if isinstance(result, (bytes, bytearray)):
+                osd.stats.bytes_returned += len(result)
+            return result, osd.osd_id, el
+        raise err if err else ObjectNotFound(name)
+
+    # -- health ------------------------------------------------------------------
+    def fail_osd(self, osd_id: int):
+        self.osds[osd_id].down = True
+
+    def recover_osd(self, osd_id: int):
+        self.osds[osd_id].down = False
+        # re-replicate: pull objects this OSD should hold from peers
+        healed = 0
+        for name in self.list_objects():
+            acting = self.acting_set(name)
+            me = self.osds[osd_id]
+            if me in acting and not me.contains(name):
+                data = self.get(name)
+                me.put(name, data)
+                healed += 1
+        return healed
+
+    def scrub(self) -> list[str]:
+        """Verify replica consistency via checksums; returns bad objects."""
+        bad = []
+        for name in self.list_objects():
+            sums = set()
+            for osd in self.acting_set(name):
+                if osd.down or not osd.contains(name):
+                    continue
+                sums.add(zlib.crc32(osd.get(name)))
+            if len(sums) > 1:
+                bad.append(name)
+        return bad
+
+    def total_stats(self) -> OSDStats:
+        agg = OSDStats()
+        for o in self.osds:
+            for f in dataclasses.fields(OSDStats):
+                setattr(agg, f.name,
+                        getattr(agg, f.name) + getattr(o.stats, f.name))
+        return agg
+
+
+class ObjectHandle:
+    """File-like random-access view of one object on one OSD — the
+    RandomAccessObject of the paper: lets the embedded access library run
+    unmodified against object bytes (implements RandomAccessSource)."""
+
+    def __init__(self, osd: OSD, name: str):
+        self._osd = osd
+        self.name = name
+
+    def read(self, offset: int, length: int) -> bytes:
+        return self._osd.get(self.name, offset, length)
+
+    def size(self) -> int:
+        return self._osd.stat(self.name)
+
+    def read_all(self) -> bytes:
+        return self._osd.get(self.name)

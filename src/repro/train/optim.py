@@ -1,0 +1,140 @@
+"""AdamW with cosine schedule, global-norm clipping, and optional int8
+moment quantization (block-wise absmax) for the >=70B configs.
+
+Moment quantization is a distributed-optimization memory trick: m/v are
+stored as int8 + a per-row fp32 scale (last dim kept fp32-accurate via the
+row granularity), cutting optimizer HBM by ~3.5x. Dequant/requant happens
+inside the (jit'd) update, so the fp32 values never persist.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"    # or "int8"
+
+
+def schedule(opt: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = opt.peak_lr * step / max(1, opt.warmup_steps)
+    frac = jnp.clip((step - opt.warmup_steps)
+                    / max(1, opt.decay_steps - opt.warmup_steps), 0.0, 1.0)
+    cos = opt.min_lr + 0.5 * (opt.peak_lr - opt.min_lr) * (
+        1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < opt.warmup_steps, warm, cos)
+
+
+# -- int8 moment codec -------------------------------------------------------
+
+
+def _quant(x):
+    """Per-row (leading-dims) absmax int8 quantization."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequant(qv):
+    return qv["q"].astype(jnp.float32) * qv["scale"]
+
+
+def _moment_zeros(p, quantized: bool):
+    if quantized and p.ndim >= 1 and p.shape[-1] >= 4:
+        return {"q": jnp.zeros(p.shape, jnp.int8),
+                "scale": jnp.zeros((*p.shape[:-1], 1), jnp.float32)}
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def _moment_read(mv):
+    if isinstance(mv, dict):
+        return _dequant(mv)
+    return mv
+
+
+def _moment_write(mv, x):
+    if isinstance(mv, dict):
+        return _quant(x)
+    return x.astype(jnp.float32)
+
+
+def _is_moment(x):
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def init_opt_state(params, opt: OptConfig):
+    quant = opt.moment_dtype == "int8"
+    m = jax.tree.map(lambda p: _moment_zeros(p, quant), params)
+    v = jax.tree.map(lambda p: _moment_zeros(p, quant), params)
+    return {"m": m, "v": v, "count": jnp.zeros((), jnp.int32)}
+
+
+def moment_specs(param_specs, moments):
+    """Logical-spec tree matching a moment tree.  Quantized leaves become
+    {"q": param_spec, "scale": param_spec minus the last (rowwise) dim}."""
+
+    def one(spec, mv):
+        if _is_moment(mv):
+            spec = tuple(spec) if spec else ()
+            lead = spec[:-1] if len(spec) else ()
+            return {"q": spec, "scale": lead + (None,)}
+        return spec
+
+    return jax.tree.map(one, param_specs, moments,
+                        is_leaf=lambda x: x is None or isinstance(x, tuple))
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(opt: OptConfig, params, grads, state):
+    count = state["count"] + 1
+    lr = schedule(opt, count)
+    gnorm = global_norm(grads)
+    scale_g = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+
+    b1, b2 = opt.b1, opt.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        g = g.astype(jnp.float32) * scale_g
+        m_f = _moment_read(m) * b1 + (1 - b1) * g
+        v_f = _moment_read(v) * b2 + (1 - b2) * jnp.square(g)
+        upd = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + opt.eps)
+        decay = opt.weight_decay if p.ndim >= 2 else 0.0
+        p_new = p.astype(jnp.float32) * (1 - lr * decay) - lr * upd
+        new_p.append(p_new.astype(p.dtype))
+        new_m.append(_moment_write(m, m_f))
+        new_v.append(_moment_write(v, v_f))
+
+    params = jax.tree.unflatten(treedef, new_p)
+    state = {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v),
+             "count": count}
+    return params, state, {"lr": lr, "grad_norm": gnorm}

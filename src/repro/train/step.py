@@ -1,0 +1,188 @@
+"""Train/serve step factories with full sharding metadata.
+
+``build_train_artifacts`` returns everything the launcher and the dry-run
+need: abstract state, in/out shardings, and the jit'd step — without ever
+materializing parameters (jax.eval_shape end to end).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import scanner
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api as model_api
+from repro.models import lm
+from repro.sharding import AxisRules, ShardingCtx, default_rules, tree_shardings
+from repro.train import optim
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for one global batch of this (arch, shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def batch_specs(cfg: ModelConfig, mesh, rules: AxisRules, structs):
+    from repro.sharding import resolve_spec
+
+    out = {}
+    for k, v in structs.items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, resolve_spec(mesh, rules, logical,
+                                                  v.shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def abstract_state(cfg: ModelConfig, opt: optim.OptConfig):
+    """(state_structs, state_spec_tree) without allocating anything."""
+    param_shapes, specs = _static_specs(cfg)
+
+    def build(params):
+        return {"params": params, "opt": optim.init_opt_state(params, opt),
+                "step": jnp.zeros((), jnp.int32)}
+
+    structs = jax.eval_shape(build, param_shapes)
+    state_specs = {
+        "params": specs,
+        "opt": {"m": optim.moment_specs(specs, structs["opt"]["m"]),
+                "v": optim.moment_specs(specs, structs["opt"]["v"]),
+                "count": None},
+        "step": None,
+    }
+    return structs, state_specs
+
+
+@functools.lru_cache(maxsize=32)
+def _static_specs_cached(cfg: ModelConfig):
+    # Specs are plain python data built during tracing; capture them via a
+    # closure side-effect so eval_shape only sees the array pytree.
+    box = {}
+
+    def run(key):
+        params, specs = lm.init_params(cfg, key)
+        box["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(run, jax.random.key(0))
+    return shapes, box["specs"]
+
+
+def _static_specs(cfg: ModelConfig):
+    return _static_specs_cached(cfg)
+
+
+def init_state(cfg: ModelConfig, opt: optim.OptConfig, key, mesh=None,
+               rules=None):
+    """Concrete (small-config) state init, optionally sharded."""
+    params, specs = lm.init_params(cfg, key)
+    state = {"params": params, "opt": optim.init_opt_state(params, opt),
+             "step": jnp.zeros((), jnp.int32)}
+    return state, specs
+
+
+def make_train_step(cfg: ModelConfig, mesh, rules: AxisRules,
+                    opt: optim.OptConfig, num_microbatches: int = 1):
+    ctx = ShardingCtx(mesh, rules)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def loss_fn(p, b):
+            return model_api.train_loss(cfg, ctx, p, b)
+
+        if num_microbatches > 1:
+            def micro(p, b):
+                bs = jax.tree.map(
+                    lambda x: x.reshape(num_microbatches,
+                                        x.shape[0] // num_microbatches,
+                                        *x.shape[1:]), b)
+
+                def acc_fn(carry, mb):
+                    l, g = jax.value_and_grad(loss_fn)(p, mb)
+                    return (carry[0] + l,
+                            jax.tree.map(jnp.add, carry[1], g)), None
+
+                zero = (jnp.zeros(()),
+                        jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                     p))
+                (l, g), _ = scanner.scan(acc_fn, zero, bs)
+                n = float(num_microbatches)
+                return l / n, jax.tree.map(lambda x: x / n, g)
+
+            loss, grads = micro(params, batch)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        new_params, opt_state, mets = optim.adamw_update(
+            opt, params, grads, state["opt"])
+        new_state = {"params": new_params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, **mets}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, rules: AxisRules):
+    ctx = ShardingCtx(mesh, rules)
+
+    def prefill_step(params, batch):
+        return model_api.prefill(cfg, ctx, params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh, rules: AxisRules):
+    ctx = ShardingCtx(mesh, rules)
+
+    def decode_step(params, cache, tokens, pos):
+        return model_api.decode_step(cfg, ctx, params, cache, tokens, pos)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly for the launcher / dry-run
+# ---------------------------------------------------------------------------
+
+
+def state_shardings(cfg: ModelConfig, opt: optim.OptConfig, mesh,
+                    rules: AxisRules):
+    structs, spec_tree = abstract_state(cfg, opt)
+    shardings = tree_shardings(mesh, rules, structs, spec_tree)
+    return structs, shardings
+
+
+def serve_param_structs(cfg: ModelConfig):
+    """bf16 parameter structs for serving (params are cast for decode)."""
+    shapes, specs = _static_specs(cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+
+    def cast(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, dt)
+        return s
+
+    return jax.tree.map(cast, shapes), specs

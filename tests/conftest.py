@@ -1,0 +1,24 @@
+import numpy as np
+import pytest
+
+from repro.aformat.table import Table
+from repro.core import make_cluster
+
+
+@pytest.fixture
+def fs():
+    return make_cluster(8)
+
+
+@pytest.fixture
+def taxi_table():
+    """NYC-taxi-like table (the paper's workload shape)."""
+    rng = np.random.default_rng(42)
+    n = 20_000
+    return Table.from_pydict({
+        "trip_id": np.arange(n, dtype=np.int64),
+        "passenger_count": rng.integers(1, 7, n).astype(np.int32),
+        "trip_distance": rng.gamma(1.5, 2.0, n).astype(np.float32),
+        "fare_amount": rng.gamma(2.0, 7.5, n).astype(np.float64),
+        "payment_type": rng.choice(["card", "cash", "disp"], n),
+    })

@@ -1,0 +1,37 @@
+"""Launcher entry points run end-to-end in smoke mode (subprocess: they
+own XLA_FLAGS / argv)."""
+
+import subprocess
+import sys
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+
+
+def _run(args):
+    return subprocess.run([sys.executable, "-m", *args],
+                          capture_output=True, text=True, env=ENV,
+                          cwd="/root/repo", timeout=480)
+
+
+def test_train_launcher_smoke():
+    out = _run(["repro.launch.train", "--arch", "starcoder2-7b", "--smoke",
+                "--steps", "12", "--batch", "2", "--seq", "32",
+                "--ckpt-every", "6"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "done: ingest" in out.stdout
+    assert "checkpoints=[6, 12]" in out.stdout
+
+
+def test_serve_launcher_smoke():
+    out = _run(["repro.launch.serve", "--arch", "starcoder2-7b", "--smoke",
+                "--requests", "3", "--max-new", "4"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "served 3 requests" in out.stdout
+
+
+def test_dryrun_single_cell():
+    out = _run(["repro.launch.dryrun", "--arch", "whisper-small",
+                "--shape", "decode_32k", "--mesh", "single",
+                "--out", "/tmp/dryrun_test"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK   whisper-small__decode_32k__single" in out.stdout

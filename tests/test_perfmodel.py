@@ -1,0 +1,122 @@
+"""Cluster performance model + roofline HLO parsing."""
+
+import numpy as np
+import pytest
+
+from repro.dataset.format import TaskRecord
+from repro.launch import roofline
+from repro.storage.perfmodel import (ClusterSpec, rebalance_nodes,
+                                     simulate_scan)
+
+
+def _osd_tasks(n, nodes, cpu=0.1, wire=1000, client=0.001):
+    return [TaskRecord("osd", i % nodes, cpu, wire, client, 10)
+            for i in range(n)]
+
+
+def test_client_scan_is_cpu_bound():
+    tasks = [TaskRecord("client", -1, 0.1, 1000, 0.1, 10)
+             for _ in range(64)]
+    r = simulate_scan(tasks, ClusterSpec(nodes=8, client_threads=16))
+    assert r.bottleneck == "client_cpu"
+    # 64 tasks x 0.1s over 16 threads = 0.4s lower bound
+    assert r.makespan_s == pytest.approx(0.4, rel=0.05)
+    assert r.client_util(ClusterSpec(nodes=8)) > 0.9
+
+
+def test_pushdown_scales_with_nodes():
+    base = _osd_tasks(256, 4)
+    t4 = simulate_scan(rebalance_nodes(base, 4), ClusterSpec(nodes=4))
+    t8 = simulate_scan(rebalance_nodes(base, 8), ClusterSpec(nodes=8))
+    t16 = simulate_scan(rebalance_nodes(base, 16), ClusterSpec(nodes=16))
+    assert t8.makespan_s < t4.makespan_s * 0.6
+    assert t16.makespan_s < t8.makespan_s * 0.7
+
+
+def test_network_bound_at_full_selectivity():
+    # 30 MB IPC results swamp the 1.25 GB/s NIC
+    tasks = _osd_tasks(64, 8, cpu=0.01, wire=30_000_000)
+    r = simulate_scan(tasks, ClusterSpec(nodes=8))
+    assert r.bottleneck == "network"
+    assert r.makespan_s == pytest.approx(64 * 30e6 / (10e9 / 8), rel=0.1)
+
+
+def test_straggler_shows_up():
+    tasks = _osd_tasks(32, 8)
+    slow = list(tasks)
+    slow[5] = TaskRecord("osd", 5 % 8, 3.0, 1000, 0.001, 10)
+    a = simulate_scan(tasks, ClusterSpec(nodes=8))
+    b = simulate_scan(slow, ClusterSpec(nodes=8))
+    assert b.makespan_s > a.makespan_s + 2.5
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parsing
+# ---------------------------------------------------------------------------
+
+HLO = """
+  x = bf16[256,4096]{1,0} all-gather(bf16[16,4096]{1,0} p), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  y = f32[1024]{0} all-reduce(f32[1024]{0} q), replica_groups=[32,16]<=[512], to_apply=add
+  z = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(f32[8,8]{1,0} a, f32[8,8]{1,0} b), replica_groups={{0,256},{1,257}}
+"""
+
+
+def test_parse_collectives():
+    colls = roofline.parse_collectives(HLO)
+    assert len(colls) == 3
+    ag = next(c for c in colls if c.op == "all-gather")
+    assert ag.group_size == 16 and not ag.crosses_pod
+    assert ag.result_bytes == 256 * 4096 * 2
+    assert ag.wire_bytes == pytest.approx(ag.result_bytes * 15 / 16)
+    ar = next(c for c in colls if c.op == "all-reduce")
+    assert ar.group_size == 16
+    assert ar.wire_bytes == pytest.approx(1024 * 4 * 2 * 15 / 16)
+    a2a = next(c for c in colls if c.op == "all-to-all")
+    assert a2a.crosses_pod                       # 0 and 256 straddle pods
+
+
+def test_cost_analysis_counts_loops_once_and_text_model_corrects():
+    """The motivation for roofline.text_costs: XLA's cost_analysis counts
+    a while body once; the text model weights it by known_trip_count."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import scanner
+
+    def g(x, w):
+        return scanner.scan(lambda c, _: (jnp.tanh(c @ w), None), x, None,
+                            length=10)[0].sum()
+
+    jax.clear_caches()
+    c = jax.jit(g).lower(jnp.zeros((64, 128)), jnp.zeros((128, 128))
+                         ).compile()
+    one = 2 * 64 * 128 * 128
+    assert c.cost_analysis()["flops"] / one < 1.5          # body once
+    tc = roofline.text_costs(c.as_text())
+    assert abs(tc["flops"] / one - 10.0) < 0.1             # body x10
+
+
+def test_text_costs_match_cost_analysis_loop_free():
+    import jax
+    import jax.numpy as jnp
+
+    def f(x, w1, w2):
+        return (jnp.tanh(x @ w1) @ w2).sum()
+
+    jax.clear_caches()
+    c = jax.jit(f).lower(jnp.zeros((128, 512)), jnp.zeros((512, 256)),
+                         jnp.zeros((256, 64))).compile()
+    ca = c.cost_analysis()
+    tc = roofline.text_costs(c.as_text())
+    assert abs(tc["flops"] - ca["flops"]) / ca["flops"] < 0.02
+    assert abs(tc["bytes"] - ca["bytes accessed"]) / \
+        ca["bytes accessed"] < 0.05
+
+
+def test_roofline_terms_bottleneck():
+    terms = roofline.roofline_terms(1e15, 1e10, [])
+    assert terms["bottleneck"] == "compute_s"
+    assert terms["roofline_fraction"] == 1.0
+    terms = roofline.roofline_terms(1e12, 1e12, [])
+    assert terms["bottleneck"] == "memory_s"
+    assert terms["roofline_fraction"] < 0.01

@@ -1,0 +1,83 @@
+"""Sharding rules: divisibility fallback, spec resolution, axis reuse."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import (bytes_per_device, default_rules, resolve_spec,
+                            tree_shardings)
+
+
+class FakeMesh:
+    """Shape-only stand-in (resolve_spec touches .shape only)."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_basic_resolution():
+    mesh = FakeMesh(data=16, model=16)
+    rules = default_rules()
+    spec = resolve_spec(mesh, rules, ("batch", None, "mlp"), (256, 4, 4096))
+    assert spec == P("data", None, "model")
+
+
+def test_divisibility_fallback_drops_axis():
+    mesh = FakeMesh(data=16, model=16)
+    rules = default_rules()
+    # 4 heads cannot shard 16 ways -> falls back to replicated
+    spec = resolve_spec(mesh, rules, ("batch", "heads", None), (256, 4, 64))
+    assert spec == P("data", None, None)
+    # but 6912 mlp (gemma3) still shards: 6912 % 16 == 0
+    spec = resolve_spec(mesh, rules, ("batch", "mlp"), (256, 6912))
+    assert spec == P("data", "model")
+
+
+def test_multi_axis_batch():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    rules = default_rules()
+    spec = resolve_spec(mesh, rules, ("batch", None), (256, 128))
+    assert spec == P(("pod", "data"), None)
+
+
+def test_axis_used_once():
+    mesh = FakeMesh(data=16, model=16)
+    rules = default_rules()
+    # both dims want "model": first (kv_seq) wins, second falls back
+    spec = resolve_spec(mesh, rules, ("kv_seq", "mlp"), (4096, 4096))
+    assert spec == P("model", None)
+
+
+def test_odd_dims_replicate():
+    mesh = FakeMesh(data=16, model=16)
+    rules = default_rules()
+    spec = resolve_spec(mesh, rules, ("batch", "vocab"), (7, 50257))
+    assert spec == P(None, None)   # 7 % 16 != 0, 50257 % 16 != 0
+
+
+def test_partial_product_fallback():
+    """batch=32 on (pod=2, data=16): pod fits (32%2==0) and pod*data=32
+    divides 32 -> both used."""
+    mesh = FakeMesh(pod=2, data=16)
+    rules = default_rules()
+    assert resolve_spec(mesh, rules, ("batch",), (32,)) == P(("pod", "data"))
+    # batch=8: pod fits, pod*data=32 does not divide 8 -> pod only
+    assert resolve_spec(mesh, rules, ("batch",), (8,)) == P(("pod",))
+
+
+def test_bytes_per_device_accounts_sharding():
+    mesh = FakeMesh(data=4, model=4)
+    rules = default_rules()
+    params = {"w": jax.ShapeDtypeStruct((1024, 1024), np.dtype("float32"))}
+    specs = {"w": ("embed", "mlp")}
+    n = bytes_per_device(mesh, rules, params, specs)
+    assert n == 1024 * 1024 * 4 // 16
+
+
+def test_unknown_logical_axis_raises():
+    mesh = FakeMesh(data=2)
+    rules = default_rules()
+    with pytest.raises(KeyError):
+        resolve_spec(mesh, rules, ("no_such_axis",), (16,))

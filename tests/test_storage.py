@@ -1,0 +1,189 @@
+"""Storage layer: placement, replication, failover, striping, DOA, layouts."""
+
+import numpy as np
+import pytest
+
+from repro.aformat import parquet
+from repro.aformat.expressions import field
+from repro.aformat.table import Table
+from repro.storage import layouts
+from repro.storage.cephfs import CephFS, DirectObjectAccess, FileSource
+from repro.storage.objclass import register_default_classes
+from repro.storage.objstore import ObjectNotFound, ObjectStore, OSDDownError
+
+
+# ---------------------------------------------------------------------------
+# object store
+# ---------------------------------------------------------------------------
+
+
+def test_replication_and_placement():
+    store = ObjectStore(8, replication=3)
+    store.put("obj1", b"hello")
+    acting = store.acting_set("obj1")
+    assert len(acting) == 3
+    assert len({o.osd_id for o in acting}) == 3
+    # deterministic placement
+    assert [o.osd_id for o in store.acting_set("obj1")] == \
+        [o.osd_id for o in acting]
+    for o in acting:
+        assert o.contains("obj1")
+
+
+def test_placement_is_balanced():
+    store = ObjectStore(8, replication=3)
+    for i in range(400):
+        store.put(f"o{i}", b"x" * 10)
+    counts = [o.stats.objects for o in store.osds]
+    assert min(counts) > 0
+    assert max(counts) < 3 * 400 / 8 * 2.5   # no pathological skew
+
+
+def test_failover_read():
+    store = ObjectStore(4, replication=3)
+    store.put("k", b"data")
+    primary = store.primary_of("k")
+    store.fail_osd(primary.osd_id)
+    assert store.get("k") == b"data"          # replica serves the read
+    with pytest.raises(ObjectNotFound):
+        store.get("nonexistent")
+
+
+def test_write_quorum():
+    store = ObjectStore(3, replication=3)
+    store.put("a", b"1")
+    acting = store.acting_set("a")
+    store.fail_osd(acting[0].osd_id)
+    store.put("b", b"2")                       # 2/3 still a quorum
+    store.fail_osd(acting[1].osd_id)
+    with pytest.raises(OSDDownError):
+        store.put("c", b"3")
+
+
+def test_recover_osd_heals():
+    store = ObjectStore(4, replication=3)
+    for i in range(50):
+        store.put(f"o{i}", bytes([i]))
+    victim = store.osds[1]
+    store.fail_osd(1)
+    for i in range(50, 60):
+        store.put(f"o{i}", bytes([i]))
+    healed = store.recover_osd(1)
+    assert healed > 0
+    assert store.scrub() == []
+
+
+def test_scrub_detects_corruption():
+    store = ObjectStore(4, replication=3)
+    store.put("x", b"good")
+    victim = store.acting_set("x")[1]
+    victim._objects["x"] = b"evil"            # bit-rot injection
+    assert store.scrub() == ["x"]
+
+
+def test_cls_call_runs_on_storage_node():
+    store = register_default_classes(ObjectStore(4))
+    store.put("obj", b"payload")
+    out, osd_id, el = store.cls_call("obj", "checksum_op")
+    import zlib, struct
+    assert struct.unpack("<I", out)[0] == zlib.crc32(b"payload")
+    assert osd_id in [o.osd_id for o in store.acting_set("obj")]
+    assert store.osds[osd_id].stats.cls_calls == 1
+    assert store.osds[osd_id].stats.busy_s > 0
+
+
+# ---------------------------------------------------------------------------
+# CephFS striping + DirectObjectAccess
+# ---------------------------------------------------------------------------
+
+
+def test_striping_roundtrip(fs):
+    data = bytes(range(256)) * 5000            # 1.28 MB
+    fs.write_file("/f", data, stripe_unit=100_000)
+    ino = fs.stat("/f")
+    assert ino.object_count == -(-len(data) // 100_000)
+    assert fs.read_file("/f") == data
+    # random-access range reads across stripe boundaries
+    for off, ln in [(0, 10), (99_990, 30), (250_000, 123), (len(data) - 5, 5)]:
+        assert fs.read_range("/f", off, ln) == data[off:off + ln]
+
+
+def test_direct_object_access_translation(fs):
+    data = b"ab" * 150_000
+    fs.write_file("/x", data, stripe_unit=65536)
+    doa = DirectObjectAccess(fs)
+    ids = doa.object_ids("/x")
+    assert len(ids) == fs.stat("/x").object_count
+    # every id resolves in the store and concatenates back to the file
+    assert b"".join(fs.store.get(i) for i in ids)[:len(data)] == data
+
+
+def test_hedged_call_accounts_both(fs):
+    tbl = Table.from_pydict({"x": np.arange(100, dtype=np.int64)})
+    layouts.write_flat(fs, "/h.arw", tbl)
+    doa = DirectObjectAccess(fs)
+    name = fs.object_names("/h.arw")[0]
+    primary = fs.store.primary_of(name)
+    primary.straggle_factor = 1e6              # pathological straggler
+    res, osd_id, el, hedged = doa.call_hedged(
+        "/h.arw", 0, "scan_op", {"columns": ["x"]},
+        hedge_threshold_s=1e-5)
+    assert hedged
+    assert osd_id != primary.osd_id            # replica won
+    assert Table.from_ipc(res).num_rows == 100
+
+
+# ---------------------------------------------------------------------------
+# layouts: striped / split / flat self-containment
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def small_table():
+    rng = np.random.default_rng(7)
+    return Table.from_pydict({
+        "a": np.arange(3000, dtype=np.int64),
+        "b": rng.normal(size=3000).astype(np.float32),
+    })
+
+
+def test_striped_layout_self_contained(fs, small_table):
+    meta = layouts.write_striped(fs, "/s.arw", small_table,
+                                 row_group_rows=512)
+    ino = fs.stat("/s.arw")
+    assert ino.stripe_unit == meta.stripe_unit
+    footer = layouts.read_striped_footer(fs, "/s.arw")
+    assert footer.num_rows == 3000
+    for i, rg in enumerate(footer.row_groups):
+        first = rg.chunks[0].offset // ino.stripe_unit
+        last = (rg.chunks[-1].offset
+                + sum(rg.chunks[-1].buffer_lengths) - 1) // ino.stripe_unit
+        assert first == last == meta.rg_objects[i]   # never spans objects
+
+
+def test_striped_scan_matches(fs, small_table):
+    layouts.write_striped(fs, "/s.arw", small_table, row_group_rows=512)
+    footer = layouts.read_striped_footer(fs, "/s.arw")
+    src = FileSource(fs, "/s.arw")
+    back = parquet.scan_file(src, meta=footer)
+    assert back.equals(small_table)
+
+
+def test_split_layout(fs, small_table):
+    index_path = layouts.write_split(fs, "/p.arw", small_table,
+                                     row_group_rows=512)
+    idx = layouts.read_split_index(fs, index_path)
+    assert len(idx.row_groups) == -(-3000 // 512)
+    parts = []
+    for rg in idx.row_groups:
+        sub = fs.read_file(rg["file"])
+        parts.append(parquet.scan_file(parquet.BytesSource(sub)))
+        assert fs.stat(rg["file"]).object_count == 1   # one object per part
+    assert Table.concat(parts).equals(small_table)
+
+
+def test_flat_layout_single_object(fs, small_table):
+    layouts.write_flat(fs, "/f.arw", small_table, row_group_rows=512)
+    assert fs.stat("/f.arw").object_count == 1
+    back = parquet.scan_file(FileSource(fs, "/f.arw"))
+    assert back.equals(small_table)
