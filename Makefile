@@ -1,0 +1,23 @@
+# Tier-1 verification and benchmark entry points (see ROADMAP.md).
+
+PYTHON ?= python
+export PYTHONPATH := src:.:$(PYTHONPATH)
+
+.PHONY: test bench bench-adaptive bench-fig5 bench-fig6 deps
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt
+
+bench: bench-fig5 bench-fig6 bench-adaptive
+
+bench-fig5:
+	$(PYTHON) benchmarks/fig5_latency_scaling.py
+
+bench-fig6:
+	$(PYTHON) benchmarks/fig6_cpu_utilization.py
+
+bench-adaptive:
+	$(PYTHON) benchmarks/adaptive_scan.py

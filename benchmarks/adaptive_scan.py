@@ -1,0 +1,202 @@
+"""Adaptive-placement crossover benchmark (the paper's Fig. 5/6 regime).
+
+The paper shows pushdown wins while storage CPUs have headroom and loses
+once they saturate; its placement is static, so *somebody* always picks
+wrong.  This benchmark sweeps simulated client count C.  Each policy's
+per-fragment costs are measured once on this host (real decode/filter CPU,
+real wire bytes), then replayed through the multi-client cluster model
+(``storage.perfmodel.simulate_multi_client``): every client owns its CPU
+and NIC, the storage node pools are shared — so pushdown latency grows
+with C while the client-side scan stays flat, reproducing the crossover.
+
+The adaptive policy is re-*run* at every C: the other clients' load is
+presented to the scheduler as per-OSD background queue depth
+(``OSD.background_load``, read back through ``ObjectStore.load_of``), and
+a fresh scheduler must route fragments from those live signals alone.
+Its per-fragment placement decisions are then priced with the same
+static-policy measurements, so all three policies replay identical work
+(run-to-run decode-CPU noise on a throttled host would otherwise swamp
+the wire/queueing effects the model isolates).
+
+Claims checked (emitted in the JSON report):
+  (a) the static policies cross over inside the sweep;
+  (b) adaptive tracks the better static policy (<= 1.1x) at both the
+      lowest and highest client counts;
+  (c) a repeated identical scan is served from the columnar result cache
+      (hit count > 0) at a fraction of the cost;
+  (d) with one straggling OSD, hedged re-issues fire and a replica
+      serves the scan.
+
+    PYTHONPATH=src python benchmarks/adaptive_scan.py
+"""
+
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import (build_cluster, save_result,
+                               selectivity_predicate, taxi_like_table)
+from repro.dataset import AdaptiveFormat, dataset, modeled_latency
+from repro.storage.perfmodel import ClusterSpec, simulate_multi_client
+
+ROWS = 200_000
+ROWS_PER_FILE = 4_096        # ~49 fragments, one row group per object
+PROJECT = ["trip_id", "fare_amount", "tip_amount", "duration_s"]
+SELECTIVITY = 0.1            # the paper's pushdown-friendly midpoint
+NODES = 8
+NODE_THREADS = 8
+CLIENT_THREADS = 16          # per client (paper: 16 scan threads)
+CLIENTS = (1, 2, 4, 8, 16, 32)
+SPEC = ClusterSpec(nodes=NODES, node_threads=NODE_THREADS,
+                   client_threads=CLIENT_THREADS)
+
+
+def set_background_clients(fs, clients: int):
+    """Present C-1 other tenants to the scheduler: each keeps roughly a
+    node's worth of scan tasks in flight per OSD (a full pipeline), which
+    is exactly the queue the replay's shared node pools will see."""
+    for osd in fs.store.osds:
+        osd.background_load = (clients - 1) * osd.threads
+
+
+def mean_scan_latency(tasks, clients: int) -> float:
+    """Mean per-client scan latency (makespan) under the cluster model."""
+    return statistics.fmean(simulate_multi_client(tasks, SPEC, clients))
+
+
+def measure_best(make_scan, reps: int = 3):
+    """Run a scan ``reps`` times and keep the cheapest run's tasks: wall-
+    clock-derived CPU accounting is noisy on a loaded 1-core host, and the
+    minimum is the least-contended observation of the same fixed work."""
+    best = None
+    for _ in range(reps):
+        sc, extra = make_scan()
+        sc.to_table()
+        cost = sum(t.cpu_s + t.client_cpu_s for t in sc.metrics.tasks)
+        if best is None or cost < best[0]:
+            best = (cost, sc.metrics.tasks, extra)
+    return best[1], best[2]
+
+
+def run() -> dict:
+    table = taxi_like_table(ROWS)
+    fs = build_cluster(NODES, table, rows_per_file=ROWS_PER_FILE)
+    ds = dataset(fs, "/taxi")
+    pred = selectivity_predicate(table, SELECTIVITY)
+    out: dict = {"rows": ROWS, "fragments": len(ds.fragments()),
+                 "selectivity": SELECTIVITY, "clients": list(CLIENTS),
+                 "cells": []}
+
+    # warmup: first-touch costs (allocator, zlib tables) out of the timings
+    ds.scanner(format="pushdown", columns=PROJECT, num_threads=1).to_table()
+
+    # static policies: measure the per-fragment costs once (they don't
+    # depend on C; only the replay's contention does)
+    static_tasks = {}
+    for policy in ("parquet", "pushdown"):
+        static_tasks[policy], _ = measure_best(
+            lambda p=policy: (ds.scanner(format=p, columns=PROJECT,
+                                         predicate=pred, num_threads=1),
+                              None))
+
+    for clients in CLIENTS:
+        cell = {"clients": clients}
+        for policy in ("parquet", "pushdown"):
+            cell[policy + "_s"] = mean_scan_latency(static_tasks[policy],
+                                                    clients)
+        # adaptive: a fresh scheduler must find the right placement from
+        # live load signals (and with a cold cache), not from having seen
+        # this client count before.  Its *decisions* come from this live
+        # run; each fragment's *cost* is then taken from the common
+        # static measurement of the same placement, so all three policies
+        # are replayed over identical per-fragment work and the
+        # comparison is immune to run-to-run CPU noise on a loaded host.
+        set_background_clients(fs, clients)
+        fmt = AdaptiveFormat(client_threads=CLIENT_THREADS)
+        sc = ds.scanner(format=fmt, columns=PROJECT, predicate=pred,
+                        num_threads=1)
+        sc.to_table()
+        hybrid = [static_tasks["pushdown" if t.where == "osd"
+                               else "parquet"][i]
+                  for i, t in enumerate(sc.metrics.tasks)]
+        cell["adaptive_s"] = mean_scan_latency(hybrid, clients)
+        cell["decisions"] = fmt.stats()["decisions"]
+        cell["best_static_s"] = min(cell["parquet_s"], cell["pushdown_s"])
+        cell["adaptive_vs_best"] = (cell["adaptive_s"]
+                                    / max(cell["best_static_s"], 1e-12))
+        out["cells"].append(cell)
+    set_background_clients(fs, 1)
+
+    # -- result cache: repeat the identical scan at low load ------------------
+    fmt = AdaptiveFormat(client_threads=CLIENT_THREADS)
+    first = ds.scanner(format=fmt, columns=PROJECT, predicate=pred,
+                       num_threads=1)
+    first.to_table()
+    second = ds.scanner(format=fmt, columns=PROJECT, predicate=pred,
+                        num_threads=1)
+    second.to_table()
+    out["cache"] = {
+        "first_scan_s": mean_scan_latency(first.metrics.tasks, 1),
+        "repeat_scan_s": mean_scan_latency(second.metrics.tasks, 1),
+        "repeat_hits": second.metrics.cache_hits,
+        **fmt.stats()["cache"],
+    }
+
+    # -- hedging: one pathological straggler at low load ----------------------
+    straggler = fs.store.osds[0]
+    straggler.straggle_factor = 50.0
+    fmt = AdaptiveFormat(client_threads=CLIENT_THREADS)
+    sc = ds.scanner(format=fmt, columns=PROJECT, predicate=pred,
+                    num_threads=1)
+    sc.to_table()
+    straggler.straggle_factor = 1.0
+    out["hedging"] = {"hedged_tasks": sc.metrics.hedged_tasks,
+                      "hedges": fmt.stats()["hedges"],
+                      "mean_task_s": statistics.fmean(
+                          modeled_latency(t) for t in sc.metrics.tasks)}
+    return out
+
+
+def check_claims(out: dict) -> list[str]:
+    cells = out["cells"]
+    lo, hi = cells[0], cells[-1]
+    claims = [
+        ("static policies cross over inside the sweep",
+         (lo["pushdown_s"] < lo["parquet_s"])
+         and (hi["parquet_s"] < hi["pushdown_s"])),
+        ("adaptive <= 1.1x best static at low load",
+         lo["adaptive_vs_best"] <= 1.1),
+        ("adaptive <= 1.1x best static at saturation",
+         hi["adaptive_vs_best"] <= 1.1),
+        ("repeat scan served from result cache",
+         out["cache"]["repeat_hits"] > 0
+         and out["cache"]["repeat_scan_s"] < out["cache"]["first_scan_s"]),
+        ("hedging fires against a straggling OSD",
+         out["hedging"]["hedges"] > 0),
+    ]
+    return [f"{'PASS' if ok else 'FAIL'}  {txt}" for txt, ok in claims]
+
+
+def main():
+    out = run()
+    out["claims"] = check_claims(out)
+    save_result("adaptive_scan", out)
+    print(f"# adaptive_scan: {out['rows']} rows, {out['fragments']} "
+          f"fragments, selectivity {out['selectivity']}")
+    print("clients,parquet_ms,pushdown_ms,adaptive_ms,adaptive_vs_best,"
+          "decisions")
+    for c in out["cells"]:
+        print(f"{c['clients']},{c['parquet_s'] * 1e3:.3f},"
+              f"{c['pushdown_s'] * 1e3:.3f},{c['adaptive_s'] * 1e3:.3f},"
+              f"{c['adaptive_vs_best']:.3f},{c['decisions']}")
+    print(f"cache: first {out['cache']['first_scan_s'] * 1e3:.3f} ms -> "
+          f"repeat {out['cache']['repeat_scan_s'] * 1e3:.3f} ms "
+          f"({out['cache']['repeat_hits']} hits)")
+    print(f"hedging: {out['hedging']['hedges']} hedged re-issues")
+    for line in out["claims"]:
+        print(line)
+    return out
+
+
+if __name__ == "__main__":
+    main()

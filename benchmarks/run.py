@@ -11,8 +11,9 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (fig5_latency_scaling, fig6_cpu_utilization,
-                        ingest_train, kernel_bench, layout_compare)
+from benchmarks import (adaptive_scan, fig5_latency_scaling,
+                        fig6_cpu_utilization, ingest_train, kernel_bench,
+                        layout_compare)
 
 BENCHES = {
     "fig5": fig5_latency_scaling.main,
@@ -20,6 +21,7 @@ BENCHES = {
     "layout": layout_compare.main,
     "kernels": kernel_bench.main,
     "ingest": ingest_train.main,
+    "adaptive": adaptive_scan.main,
 }
 
 

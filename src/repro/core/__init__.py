@@ -12,6 +12,8 @@ placement behind one API.  The pieces:
   dataset / Scanner            the Dataset API
   ParquetFormat                client-side scan      (their baseline)
   PushdownParquetFormat        storage-side scan     (their RADOS Parquet)
+  AdaptiveFormat / ScanScheduler   runtime placement from live OSD load,
+                               with hedged scans + a columnar result cache
 
 ``make_cluster`` assembles the standard stack used by the examples, tests
 and benchmarks.
@@ -19,8 +21,9 @@ and benchmarks.
 
 from __future__ import annotations
 
-from repro.dataset import (Dataset, ParquetFormat, PushdownParquetFormat,
-                           Scanner, dataset)
+from repro.dataset import (AdaptiveFormat, Dataset, ParquetFormat,
+                           PushdownParquetFormat, ScanScheduler, Scanner,
+                           dataset)
 from repro.storage.cephfs import CephFS, DirectObjectAccess
 from repro.storage.layouts import write_flat, write_split, write_striped
 from repro.storage.objclass import register_default_classes
@@ -36,7 +39,8 @@ def make_cluster(num_osds: int = 8, *, replication: int = 3,
     return CephFS(store)
 
 
-__all__ = ["Dataset", "ParquetFormat", "PushdownParquetFormat", "Scanner",
-           "dataset", "CephFS", "DirectObjectAccess", "write_flat",
-           "write_split", "write_striped", "register_default_classes",
-           "ObjectStore", "make_cluster"]
+__all__ = ["Dataset", "ParquetFormat", "PushdownParquetFormat",
+           "AdaptiveFormat", "ScanScheduler", "Scanner", "dataset",
+           "CephFS", "DirectObjectAccess", "write_flat", "write_split",
+           "write_striped", "register_default_classes", "ObjectStore",
+           "make_cluster"]

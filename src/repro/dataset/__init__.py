@@ -1,8 +1,11 @@
 from repro.dataset.dataset import Dataset, ScanMetrics, Scanner, dataset
-from repro.dataset.format import (FileFormat, ParquetFormat,
+from repro.dataset.format import (AdaptiveFormat, FileFormat, ParquetFormat,
                                   PushdownParquetFormat, TaskRecord)
 from repro.dataset.fragment import Fragment
+from repro.dataset.scheduler import (ResultCache, ScanScheduler,
+                                     modeled_latency)
 
 __all__ = ["Dataset", "ScanMetrics", "Scanner", "dataset", "FileFormat",
-           "ParquetFormat", "PushdownParquetFormat", "TaskRecord",
-           "Fragment"]
+           "ParquetFormat", "PushdownParquetFormat", "AdaptiveFormat",
+           "TaskRecord", "Fragment", "ResultCache", "ScanScheduler",
+           "modeled_latency"]

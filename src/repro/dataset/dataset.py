@@ -4,7 +4,15 @@ Discovery maps a CephFS prefix to a list of self-contained Fragments for
 any of the three layouts (flat single-object files, striped, split); the
 Scanner prunes fragments on footer/index statistics (predicate pushdown),
 then scans the survivors in parallel with a bounded per-storage-node queue
-depth, through whichever FileFormat placement the caller picked.
+depth, through whichever FileFormat placement the caller picked:
+
+* ``format="parquet"``   — client-side decode (the paper's baseline),
+* ``format="pushdown"``  — storage-side ``scan_op`` (the paper's RADOS
+  Parquet),
+* ``format="adaptive"``  — per-fragment placement decided at runtime by
+  the :class:`~repro.dataset.scheduler.ScanScheduler` from live OSD load,
+  with hedged storage scans and an LRU columnar result cache (this repo's
+  extension past the paper's static-placement limitation).
 """
 
 from __future__ import annotations
@@ -22,7 +30,7 @@ from repro.aformat import parquet
 from repro.aformat.expressions import ALL, NONE, Expr
 from repro.aformat.schema import Schema
 from repro.aformat.table import Column, Table
-from repro.dataset.format import (FileFormat, ParquetFormat,
+from repro.dataset.format import (AdaptiveFormat, FileFormat, ParquetFormat,
                                   PushdownParquetFormat, TaskRecord)
 from repro.dataset.fragment import Fragment
 from repro.storage import layouts
@@ -55,9 +63,14 @@ class Dataset:
                 columns: Sequence[str] | None = None,
                 predicate: Expr | None = None,
                 num_threads: int = 16, queue_depth: int = 4) -> "Scanner":
+        """Build a Scanner.  ``format`` is a FileFormat instance or one of
+        "parquet" (client-side), "pushdown" (storage-side), "adaptive"
+        (scheduler-placed; pass an ``AdaptiveFormat`` instance instead to
+        keep its result cache warm across scans)."""
         if isinstance(format, str):
             format = {"parquet": ParquetFormat,
-                      "pushdown": PushdownParquetFormat}[format]()
+                      "pushdown": PushdownParquetFormat,
+                      "adaptive": AdaptiveFormat}[format]()
         return Scanner(self, format, columns, predicate,
                        num_threads=num_threads, queue_depth=queue_depth)
 
@@ -192,6 +205,14 @@ class ScanMetrics:
     def wire_bytes(self) -> int:
         return self.discovery_bytes + sum(t.wire_bytes for t in self.tasks)
 
+    @property
+    def cache_hits(self) -> int:
+        return sum(1 for t in self.tasks if t.cached)
+
+    @property
+    def hedged_tasks(self) -> int:
+        return sum(1 for t in self.tasks if t.hedged)
+
     def summary(self) -> dict:
         return {
             "fragments": self.fragments_total,
@@ -201,6 +222,8 @@ class ScanMetrics:
             "client_cpu_s": round(self.client_cpu_s, 4),
             "osd_cpu_s": round(self.osd_cpu_s, 4),
             "wall_s": round(self.wall_s, 4),
+            "cache_hits": self.cache_hits,
+            "hedged": self.hedged_tasks,
         }
 
 
@@ -242,6 +265,11 @@ class Scanner:
         store = self.ds.fs.store
         lock = threading.Lock()
         sems: dict[int, threading.Semaphore] = {}
+        # static pushdown scans honour a bounded per-node queue depth.
+        # The adaptive format is NOT throttled here: fragments it serves
+        # from cache or routes client-side never touch the node, and its
+        # storage-side calls are already capped per OSD by the store's own
+        # concurrency limit (OSD._cls_sem)
         use_qd = isinstance(self.fmt, PushdownParquetFormat)
 
         def node_sem(frag: Fragment) -> threading.Semaphore | None:

@@ -5,6 +5,10 @@
 ``PushdownParquetFormat``  — the paper's contribution: ``scan_op`` runs on
                              the storage node holding the object; only the
                              filtered/projected Arrow-IPC result travels.
+``AdaptiveFormat``         — per-fragment placement chosen at runtime by a
+                             ScanScheduler from live OSD load, with hedged
+                             storage scans and an LRU result cache
+                             (``repro.dataset.scheduler``).
 
 Switching the format argument switches the placement — nothing else in the
 Dataset/Scanner API changes (paper §2.2, RadosParquetFileFormat).
@@ -13,6 +17,7 @@ Dataset/Scanner API changes (paper §2.2, RadosParquetFileFormat).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Sequence
 
@@ -34,6 +39,7 @@ class TaskRecord:
     client_cpu_s: float   # residual client CPU (IPC decode / materialize)
     rows_out: int
     hedged: bool = False
+    cached: bool = False  # served from the columnar result cache
 
 
 class FileFormat:
@@ -72,6 +78,20 @@ class ParquetFormat(FileFormat):
         return tbl, rec
 
 
+def scan_payload(frag: Fragment, columns, predicate) -> dict[str, Any]:
+    """The ``scan_op`` request for one fragment — shared by the static
+    pushdown format and the adaptive scheduler so the wire contract can
+    never diverge between the two."""
+    payload: dict[str, Any] = {
+        "columns": list(columns) if columns is not None else None,
+        "predicate": predicate.to_json() if predicate is not None else None,
+        "row_groups": [frag.rg_in_object],
+    }
+    if frag.footer is not None:
+        payload["footer"] = frag.footer.serialize()
+    return payload
+
+
 class PushdownParquetFormat(FileFormat):
     """Storage-side scan (the paper's RADOS Parquet): invoke ``scan_op`` on
     the object through DirectObjectAccess; the node decodes/filters and
@@ -82,19 +102,9 @@ class PushdownParquetFormat(FileFormat):
     def __init__(self, *, hedge_threshold_s: float | None = None):
         self.hedge_threshold_s = hedge_threshold_s
 
-    def _payload(self, frag, columns, predicate) -> dict[str, Any]:
-        payload: dict[str, Any] = {
-            "columns": list(columns) if columns is not None else None,
-            "predicate": predicate.to_json() if predicate is not None else None,
-            "row_groups": [frag.rg_in_object],
-        }
-        if frag.footer is not None:
-            payload["footer"] = frag.footer.serialize()
-        return payload
-
     def scan_fragment(self, fs, frag, columns, predicate):
         doa = DirectObjectAccess(fs)
-        payload = self._payload(frag, columns, predicate)
+        payload = scan_payload(frag, columns, predicate)
         if self.hedge_threshold_s is not None:
             result, osd_id, el, hedged = doa.call_hedged(
                 frag.path, frag.obj_idx, "scan_op", payload,
@@ -109,3 +119,53 @@ class PushdownParquetFormat(FileFormat):
         rec = TaskRecord("osd", osd_id, el, len(result), client_cpu,
                          len(tbl), hedged=hedged)
         return tbl, rec
+
+
+class AdaptiveFormat(FileFormat):
+    """Runtime per-fragment placement (the adaptive scheduler's front-end).
+
+    Each fragment is routed storage-side or client-side by a
+    ``ScanScheduler`` reading live OSD load (``ObjectStore.load_of``),
+    with hedged storage scans and an LRU columnar result cache.  Keep one
+    instance across scans to retain the cache and the learned rate
+    estimates; pass ``scheduler=`` to share a scheduler between formats.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, scheduler: "Any | None" = None, **scheduler_kwargs):
+        # one scheduler per cluster: scanning dataset A then dataset B on
+        # different clusters must not rebuild (and so lose) either
+        # scheduler's cache and learned rates
+        self._schedulers: dict[int, Any] = \
+            {id(scheduler.fs): scheduler} if scheduler is not None else {}
+        self._kwargs = scheduler_kwargs
+        self._bind_lock = threading.Lock()
+
+    def scheduler_for(self, fs: CephFS):
+        """The scheduler bound to ``fs`` (created on first use)."""
+        from repro.dataset.scheduler import ScanScheduler
+        with self._bind_lock:
+            sched = self._schedulers.get(id(fs))
+            if sched is None:
+                sched = ScanScheduler(fs, **self._kwargs)
+                self._schedulers[id(fs)] = sched
+            return sched
+
+    def scan_fragment(self, fs, frag, columns, predicate):
+        return self.scheduler_for(fs).scan_fragment(frag, columns,
+                                                    predicate)
+
+    def stats(self) -> dict:
+        """Decision/hedge/cache counters, summed across every cluster
+        this format has scanned."""
+        out: dict[str, Any] = {}
+        for sched in self._schedulers.values():
+            for key, val in sched.stats().items():
+                if isinstance(val, dict):
+                    agg = out.setdefault(key, {})
+                    for k, v in val.items():
+                        agg[k] = agg.get(k, 0) + v
+                else:
+                    out[key] = out.get(key, 0) + val
+        return out

@@ -1,0 +1,369 @@
+"""Adaptive scan scheduling: per-fragment placement, hedging, result cache.
+
+The paper's limitation (§4, Fig. 5/6) is that the offload decision is
+*static*: ``PushdownParquetFormat`` always scans on the storage node,
+``ParquetFormat`` always on the client — but pushdown only wins while the
+storage-side CPUs have headroom.  Once OSDs saturate (many clients, or a
+straggling node), shipping raw bytes and decoding locally is faster.
+
+:class:`ScanScheduler` turns that decision into a feedback loop, per
+fragment, at scan time:
+
+placement
+    Price both placements per fragment as amortized cost on the
+    bottleneck resource (the same k-server view as
+    ``storage.perfmodel``), and run the scan wherever the estimate is
+    lower:
+
+    * ``est_storage = max(decode_s * pressure / storage_threads,
+      ipc_out_bytes / net_bw)`` — storage CPU is shared by every tenant
+      (pressure scales with their in-flight queue depth), the client NIC
+      carries only the filtered result;
+    * ``est_client = max(raw_in_bytes / net_bw, decode_s /
+      client_threads)`` — private client resources, but the NIC carries
+      the raw bytes and the client burns the decode itself.
+
+    ``pressure`` comes from :meth:`ObjectStore.load_of` — straggle factor
+    scaled by in-flight queue depth — minimized over the fragment's up
+    replicas (hedging can reach the fastest one).  ``decode_s`` and the
+    output-size ratio are EWMA estimates updated by *every* completed scan
+    on either side (the storage node runs the same decode code, so client
+    observations transfer).
+
+hedging
+    Storage-side scans carry a deadline of ``hedge_multiplier`` x the
+    rolling *median per-byte* storage-scan latency, scaled by the
+    fragment's size (size-normalized so big fragments aren't mistaken
+    for stragglers; median rather than a high quantile because a
+    straggler serving >5% of scans would drag a p95/p99 deadline above
+    its own latency and never get hedged).  A call exceeding the
+    deadline is re-issued to a replica and the faster result wins
+    (``DirectObjectAccess.call_hedged``).  If the storage path fails
+    outright (all replicas down mid-scan) the fragment falls back to the
+    client-side path.
+
+result cache
+    Decoded results are kept as Arrow-IPC bytes in an LRU
+    (:class:`ResultCache`) keyed by
+    ``(object, version, footer_hash, row_group, columns, predicate_json)``.
+    Repeat scans — the common case for dashboard / training-epoch
+    workloads — are served without touching the storage tier at all.
+    Overwrites bump the object version (``ObjectStore.version_of``) so a
+    stale result can never be served.
+
+The scheduler is exposed through ``AdaptiveFormat`` (``format="adaptive"``
+on :meth:`Dataset.scanner`), so it drops into the existing Dataset API the
+same way the two static placements do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import threading
+import time
+from collections import OrderedDict, deque
+from typing import Sequence
+
+from repro.aformat.expressions import Expr
+from repro.aformat.table import Table
+from repro.dataset.format import ParquetFormat, TaskRecord, scan_payload
+from repro.dataset.fragment import Fragment
+from repro.storage.cephfs import CephFS, DirectObjectAccess
+from repro.storage.objstore import ObjectNotFound, OSDDownError
+
+GBE10 = 10e9 / 8                 # modeled client NIC (paper testbed)
+DEFAULT_DECODE_RATE = 150e6      # bytes/s prior until the EWMA warms up
+DEFAULT_OUT_RATIO = 1.0          # decoded-IPC-bytes per stored-byte prior:
+                                 # neutral, so the cold-start estimates tie
+                                 # and the tie-break prefers storage-side
+                                 # (no exploration penalty on an idle
+                                 # cluster; the first scan teaches the
+                                 # real ratio either way)
+
+
+def modeled_latency(t: TaskRecord, net_bw: float = GBE10) -> float:
+    """Per-fragment scan latency under the paper's cluster model: measured
+    CPU seconds plus modeled wire time (storage-device time is not modeled,
+    matching ``storage.perfmodel``)."""
+    if t.cached:
+        return t.client_cpu_s
+    if t.where == "client":
+        return t.wire_bytes / net_bw + t.cpu_s
+    return t.cpu_s + t.wire_bytes / net_bw + t.client_cpu_s
+
+
+class _Ewma:
+    """Exponentially weighted running estimate with a cold-start prior."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self._v: float | None = None
+
+    def update(self, x: float):
+        self._v = x if self._v is None else \
+            self.alpha * x + (1 - self.alpha) * self._v
+
+    def value(self, default: float) -> float:
+        return default if self._v is None else self._v
+
+
+class ResultCache:
+    """Byte-bounded LRU of decoded scan results (Arrow IPC bytes).
+
+    Keys carry the object version, so an overwrite invalidates implicitly:
+    the new scan misses, and the stale entry ages out of the LRU.
+    """
+
+    def __init__(self, capacity_bytes: int = 256 << 20):
+        self.capacity_bytes = capacity_bytes
+        self._od: OrderedDict[tuple, bytes] = OrderedDict()
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: tuple) -> bytes | None:
+        with self._lock:
+            data = self._od.get(key)
+            if data is None:
+                self.misses += 1
+                return None
+            self._od.move_to_end(key)
+            self.hits += 1
+            return data
+
+    def put(self, key: tuple, data: bytes):
+        if len(data) > self.capacity_bytes:
+            return
+        with self._lock:
+            old = self._od.pop(key, None)
+            if old is not None:
+                self._bytes -= len(old)
+            self._od[key] = data
+            self._bytes += len(data)
+            while self._bytes > self.capacity_bytes:
+                _, ev = self._od.popitem(last=False)
+                self._bytes -= len(ev)
+                self.evictions += 1
+
+    def __len__(self):
+        return len(self._od)
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def stats(self) -> dict:
+        return {"entries": len(self._od), "bytes": self._bytes,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+@dataclasses.dataclass
+class PlacementEstimate:
+    """One placement decision with the estimates that produced it."""
+
+    where: str                   # "osd" or "client"
+    est_osd_s: float
+    est_client_s: float
+    in_bytes: int
+    pressure: float
+
+
+class ScanScheduler:
+    """Feedback-controlled fragment placement over one cluster (CephFS).
+
+    Thread-safe; intended to be shared across scans so the latency
+    history, rate estimators, and result cache persist (a Scanner is
+    per-query, the scheduler is per-cluster).
+    """
+
+    def __init__(self, fs: CephFS, *, net_bw: float = GBE10,
+                 client_threads: int = 16,
+                 cache_bytes: int = 256 << 20,
+                 hedge_multiplier: float = 3.0,
+                 hedge_min_s: float = 1e-3,
+                 history: int = 256):
+        self.fs = fs
+        self.store = fs.store
+        self.doa = DirectObjectAccess(fs)
+        self.net_bw = net_bw
+        self.client_threads = client_threads
+        self.cache = ResultCache(cache_bytes)
+        self.hedge_multiplier = hedge_multiplier
+        self.hedge_min_s = hedge_min_s
+        self._client_fmt = ParquetFormat()
+        self._decode_rate = _Ewma()          # bytes/s of decode+filter
+        self._out_ratio = _Ewma()            # ipc-out bytes per in byte
+        self._osd_lat: deque[float] = deque(maxlen=history)  # s per byte
+        self._lock = threading.Lock()
+        self.decisions = {"osd": 0, "client": 0, "cache": 0}
+        self.hedges = 0
+        self.fallbacks = 0
+
+    # -- signals & estimates ---------------------------------------------------
+    def _object_name(self, frag: Fragment) -> str:
+        return self.fs.object_names(frag.path)[frag.obj_idx]
+
+    def _frag_bytes(self, frag: Fragment) -> int:
+        """Stored bytes this fragment's scan must touch."""
+        if frag.footer is not None:                  # striped: rebased meta
+            return frag.footer.row_groups[0].total_bytes
+        if frag.client_meta is not None:             # flat: parent footer
+            return frag.client_meta.row_groups[frag.client_rg_index] \
+                .total_bytes
+        # split: the object *is* the row group (plus a small footer)
+        return self.store.stat(self._object_name(frag))
+
+    def pressure_of(self, frag: Fragment) -> float:
+        """Min pressure over the fragment's up replicas: hedging lets the
+        storage path reach the fastest copy, so the optimistic replica is
+        the one the estimate should price."""
+        name = self._object_name(frag)
+        loads = [self.store.load_of(o) for o in self.store.acting_set(name)
+                 if not o.down]
+        if not loads:
+            return float("inf")
+        return min(l.pressure for l in loads)
+
+    def storage_threads(self) -> int:
+        """Aggregate scan-thread capacity of the up part of the cluster."""
+        return sum(o.threads for o in self.store.osds if not o.down) or 1
+
+    def estimate(self, frag: Fragment) -> PlacementEstimate:
+        """Price both placements for this fragment from live load and the
+        learned decode-rate / selectivity estimates.
+
+        Costs are amortized over the parallelism each side offers
+        (k-server view, as in ``storage.perfmodel``): storage decode
+        spreads over the cluster's threads but is inflated by multi-tenant
+        pressure; client decode spreads over the client's private threads
+        but its NIC must carry the raw bytes."""
+        in_bytes = self._frag_bytes(frag)
+        rate = self._decode_rate.value(DEFAULT_DECODE_RATE)
+        decode_s = in_bytes / max(rate, 1.0)
+        out_bytes = in_bytes * self._out_ratio.value(DEFAULT_OUT_RATIO)
+        pressure = self.pressure_of(frag)
+        est_osd = max(decode_s * pressure / self.storage_threads(),
+                      out_bytes / self.net_bw)
+        est_client = max(in_bytes / self.net_bw,
+                         decode_s / max(1, self.client_threads))
+        where = "osd" if est_osd <= est_client else "client"
+        return PlacementEstimate(where, est_osd, est_client, in_bytes,
+                                 pressure)
+
+    def _observe(self, in_bytes: int, decode_s: float, out_bytes: int):
+        if decode_s > 0 and in_bytes > 0:
+            with self._lock:
+                self._decode_rate.update(in_bytes / decode_s)
+                self._out_ratio.update(out_bytes / in_bytes)
+
+    def _hedge_deadline(self, in_bytes: int) -> float | None:
+        """``hedge_multiplier`` x the median recent *per-byte* storage-scan
+        latency, scaled by this fragment's size — size-normalized so a
+        legitimately large fragment is not mistaken for a straggler, and
+        median-based so stragglers polluting the history cannot raise the
+        bar above themselves.  None while the history is too cold."""
+        with self._lock:
+            if len(self._osd_lat) < 8:
+                return None
+            rate = sorted(self._osd_lat)[len(self._osd_lat) // 2]
+            return max(self.hedge_min_s,
+                       self.hedge_multiplier * rate * max(1, in_bytes))
+
+    # -- cache keys -------------------------------------------------------------
+    def cache_key(self, frag: Fragment, columns: Sequence[str] | None,
+                  predicate: Expr | None) -> tuple:
+        name = self._object_name(frag)
+        version = self.store.version_of(name)
+        footer_hash = ""
+        if frag.footer is not None:
+            footer_hash = hashlib.blake2s(frag.footer.serialize(),
+                                          digest_size=8).hexdigest()
+        cols = tuple(columns) if columns is not None else None
+        pred_json = json.dumps(predicate.to_json(), sort_keys=True) \
+            if predicate is not None else ""
+        return (name, version, footer_hash, frag.rg_in_object, cols,
+                pred_json)
+
+    # -- the scan ---------------------------------------------------------------
+    def scan_fragment(self, frag: Fragment,
+                      columns: Sequence[str] | None,
+                      predicate: Expr | None) -> tuple[Table, TaskRecord]:
+        """Cache lookup -> placement decision -> (hedged) execution.
+
+        Returns the same (Table, TaskRecord) contract as a FileFormat, so
+        ``AdaptiveFormat`` is a drop-in placement."""
+        key = self.cache_key(frag, columns, predicate)
+        ipc = self.cache.get(key)
+        if ipc is not None:
+            t0 = time.perf_counter()
+            tbl = Table.from_ipc(ipc)
+            cpu = time.perf_counter() - t0
+            with self._lock:
+                self.decisions["cache"] += 1
+            rec = TaskRecord("client", -1, cpu, 0, cpu, len(tbl),
+                             cached=True)
+            return tbl, rec
+
+        est = self.estimate(frag)
+        ipc = None
+        if est.where == "osd":
+            try:
+                tbl, rec, ipc = self._scan_osd(frag, columns, predicate,
+                                               est)
+            except (OSDDownError, ObjectNotFound):
+                # storage path unavailable (e.g. every replica died after
+                # the estimate): client-side still reads via failover
+                with self._lock:
+                    self.fallbacks += 1
+                tbl, rec = self._scan_client(frag, columns, predicate)
+        else:
+            tbl, rec = self._scan_client(frag, columns, predicate)
+        # the storage path already returned IPC bytes; the client path
+        # pays one encode to make the result cacheable
+        self.cache.put(key, ipc if ipc is not None else tbl.to_ipc())
+        return tbl, rec
+
+    def _scan_osd(self, frag, columns, predicate, est):
+        payload = scan_payload(frag, columns, predicate)
+        deadline = self._hedge_deadline(est.in_bytes)
+        if deadline is None:
+            result, osd_id, el = self.doa.call(frag.path, frag.obj_idx,
+                                               "scan_op", payload)
+            hedged = False
+        else:
+            result, osd_id, el, hedged = self.doa.call_hedged(
+                frag.path, frag.obj_idx, "scan_op", payload,
+                hedge_threshold_s=deadline)
+        t0 = time.perf_counter()
+        tbl = Table.from_ipc(result)
+        client_cpu = time.perf_counter() - t0
+        sf = self.store.osds[osd_id].straggle_factor
+        with self._lock:
+            self.decisions["osd"] += 1
+            if hedged:
+                self.hedges += 1
+            self._osd_lat.append(el / max(1, est.in_bytes))
+        # el is straggle-inflated; divide it out so the decode-rate
+        # estimate stays a property of the data, not of the slow node
+        self._observe(est.in_bytes, el / max(sf, 1e-9), len(result))
+        rec = TaskRecord("osd", osd_id, el, len(result), client_cpu,
+                         len(tbl), hedged=hedged)
+        return tbl, rec, result
+
+    def _scan_client(self, frag, columns, predicate):
+        tbl, rec = self._client_fmt.scan_fragment(self.fs, frag, columns,
+                                                  predicate)
+        with self._lock:
+            self.decisions["client"] += 1
+        self._observe(rec.wire_bytes, rec.cpu_s, tbl.nbytes())
+        return tbl, rec
+
+    # -- reporting ---------------------------------------------------------------
+    def stats(self) -> dict:
+        return {"decisions": dict(self.decisions), "hedges": self.hedges,
+                "fallbacks": self.fallbacks, "cache": self.cache.stats()}

@@ -118,7 +118,7 @@ def lower_cell(arch: str, shape_name: str, mesh_name: str,
                               + ma.temp_size_in_bytes
                               - ma.alias_size_in_bytes),
     }
-    ca = compiled.cost_analysis() or {}
+    ca = roofline.cost_analysis_dict(compiled)
     # cost_analysis counts while bodies ONCE (verified in tests); the
     # loop-aware text model is authoritative for the roofline terms.
     rec["cost_hlo_body_once"] = {

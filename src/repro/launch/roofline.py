@@ -199,6 +199,16 @@ def parse_collectives(hlo_text: str) -> list[Collective]:
     return out
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions: older
+    releases return a one-element list of per-program dicts, newer ones a
+    bare dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 # ---------------------------------------------------------------------------
 # Text-based flop/byte model with loop multipliers
 #

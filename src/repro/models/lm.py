@@ -34,7 +34,7 @@ from repro.models import ssd
 from repro.models.common import (Initializer, apply_rope, cross_entropy,
                                  gelu, rms_norm, rope_at, rope_table,
                                  split_tree, swiglu)
-from repro.sharding import ShardingCtx
+from repro.sharding import ShardingCtx, shard_map
 
 # ---------------------------------------------------------------------------
 # Parameter construction
@@ -317,7 +317,7 @@ def _mlp_out_rs(ctx, act, w):
                                     tiled=True)
 
     bd = _bd(ctx)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(bd, None, "model"), P("model", "data")),
         out_specs=P(bd, "model", None), check_vma=False)(act, w)
@@ -334,7 +334,7 @@ def _attn_out_rs(ctx, o, w):
                                     tiled=True)
 
     bd = _bd(ctx)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(bd, None, "model", None), P("model", None, "data")),
         out_specs=P(bd, "model", None), check_vma=False)(o, w)
@@ -582,7 +582,7 @@ def moe_block(cfg, ctx, p, x):
         out_spec = P(bd, "model", None) if seq_ok else P(bd, None, None)
         body = tp_body
 
-    y = jax.shard_map(
+    y = shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
         check_vma=False,
     )(h_in, p["router"], p["wi"], p["wg"], p["wo"])

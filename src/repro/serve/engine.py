@@ -3,9 +3,12 @@
 Wave-batched continuous serving: requests queue up; the engine admits up to
 ``max_batch`` of them per wave, right-pads prompts to a common length,
 prefllls once, then decodes greedily until every sequence in the wave hits
-EOS or its token budget.  Per-request prompts can be *fetched through the
-pushdown scan path* (prompt tokens stored columnar in the object store) —
-the serving-side mirror of the training ingest pipeline.
+EOS or its token budget.  Per-request prompts are *fetched through the
+adaptive scan path* (prompt tokens stored columnar in the object store;
+``ingest_prompts`` / ``ServeEngine.ingest``): the scheduler decides per
+fragment whether to decode on the storage nodes or the serving host, and
+repeat ingests of hot prompt shards hit its columnar result cache — the
+serving-side mirror of the training ingest pipeline.
 """
 
 from __future__ import annotations
@@ -19,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.dataset import AdaptiveFormat, Dataset
 from repro.models import api as model_api
 from repro.models import lm
 from repro.sharding import ShardingCtx
@@ -41,6 +45,40 @@ class Completion:
     steps: int
 
 
+def ingest_prompts(ds: Dataset, *, format="adaptive",
+                   predicate=None, uid_col: str = "uid",
+                   pos_col: str = "pos", token_col: str = "token",
+                   max_new_tokens: int = 32, eos_id: int = -1,
+                   num_threads: int = 8):
+    """Scan a columnar prompt store into serving Requests.
+
+    The dataset holds one row per prompt token: (uid, pos, token).  The
+    scan runs through whatever placement ``format`` names.  Pass an
+    ``AdaptiveFormat`` *instance* (as ``ServeEngine.ingest`` does) so the
+    scheduler routes each fragment by live OSD load and repeat ingests
+    hit its result cache — the "adaptive" string builds a fresh scheduler
+    per call, which routes adaptively but cannot cache across calls.
+    Returns (requests, scan_metrics).
+    """
+    sc = ds.scanner(format=format, columns=[uid_col, pos_col, token_col],
+                    predicate=predicate, num_threads=num_threads)
+    tbl = sc.to_table()
+    uids = tbl.column(uid_col).values
+    pos = tbl.column(pos_col).values
+    toks = tbl.column(token_col).values
+    # single O(N log N) grouping pass: sort by (uid, pos), split at uid
+    # boundaries (a per-uid boolean mask would be O(U x N))
+    order = np.lexsort((pos, uids))
+    uids, toks = uids[order], toks[order].astype(np.int32)
+    bounds = np.flatnonzero(np.diff(uids)) + 1
+    reqs = [Request(int(group_uids[0]), group_toks,
+                    max_new_tokens=max_new_tokens, eos_id=eos_id)
+            for group_uids, group_toks
+            in zip(np.split(uids, bounds), np.split(toks, bounds))
+            if len(group_uids)]
+    return reqs, sc.metrics
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, mesh, rules, params, *,
                  max_batch: int = 8, pad_id: int = 0):
@@ -50,6 +88,11 @@ class ServeEngine:
         self.max_batch = max_batch
         self.pad_id = pad_id
         self._queue: list[Request] = []
+        self.last_ingest_metrics = None     # ScanMetrics of the last ingest
+        # one format for the engine's lifetime: its scheduler's result
+        # cache and learned rates persist across ingests, so repeat
+        # ingests of hot prompt shards skip the storage tier
+        self._ingest_format = AdaptiveFormat()
 
         cfg_ = cfg
         ctx = self.ctx
@@ -72,6 +115,17 @@ class ServeEngine:
 
     def pending(self) -> int:
         return len(self._queue)
+
+    def ingest(self, ds: Dataset, **kwargs) -> int:
+        """Pull prompts from a columnar dataset through the adaptive scan
+        scheduler and enqueue them; scan accounting lands in
+        ``self.last_ingest_metrics``.  Returns the number admitted."""
+        kwargs.setdefault("format", self._ingest_format)
+        reqs, metrics = ingest_prompts(ds, **kwargs)
+        self.last_ingest_metrics = metrics
+        for r in reqs:
+            self.submit(r)
+        return len(reqs)
 
     # -- one wave -----------------------------------------------------------------
     def _admit(self) -> list[Request]:

@@ -19,6 +19,17 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.4.38 exposes shard_map at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental namespace; the replica
+    # check kwarg is spelled check_rep there instead of check_vma
+    from jax.experimental.shard_map import shard_map as _shard_map_compat
+
+    def shard_map(f, /, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map_compat(f, **kwargs)
+
 # ---------------------------------------------------------------------------
 # Logical axis vocabulary
 # ---------------------------------------------------------------------------
@@ -103,11 +114,11 @@ def resolve_spec(
     used: set[str] = set()
     parts: list[Any] = []
     for logical, dim in zip(logical_axes, shape):
+        candidates = [a for a in rules.mesh_axes(logical)
+                      if a not in used and a in mesh.shape]
         chosen: list[str] = []
         size = 1
-        for axis in rules.mesh_axes(logical):
-            if axis in used or axis not in mesh.shape:
-                continue
+        for axis in candidates:
             nxt = size * _axis_size(mesh, axis)
             if nxt == 0 or dim % nxt != 0:
                 continue
@@ -116,7 +127,10 @@ def resolve_spec(
         used.update(chosen)
         if not chosen:
             parts.append(None)
-        elif len(chosen) == 1:
+        elif len(chosen) == 1 and len(candidates) == 1:
+            # a product rule keeps tuple form even when one factor fits
+            # (identical semantics; stable across PartitionSpec equality
+            # behaviour of different jax versions)
             parts.append(chosen[0])
         else:
             parts.append(tuple(chosen))

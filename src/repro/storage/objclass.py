@@ -4,6 +4,11 @@
 client would run, but against the object's bytes on the storage node, and
 returns the filtered/projected result in IPC (Arrow) wire format.
 
+The scan path is cache-aware: parsed footers are memoized per
+(osd, object, version) so repeat scans of a hot object skip the
+metadata-decode step entirely; any overwrite bumps the object version and
+naturally invalidates the entry.
+
 Registered methods receive (ObjectHandle, payload dict) and return bytes.
 """
 
@@ -11,12 +16,47 @@ from __future__ import annotations
 
 import json
 import struct
+import threading
 import zlib
+from collections import OrderedDict
 
 from repro.aformat import parquet
 from repro.aformat.expressions import Expr
 from repro.aformat.table import Table
 from repro.storage.objstore import ObjectStore, ObjectHandle
+
+# -- storage-side footer cache ----------------------------------------------
+# Keyed by (osd_id, object name, object version): a new write produces a new
+# version, so stale footers age out of the LRU rather than being served.
+_FOOTER_CACHE: OrderedDict[tuple, parquet.FileMeta] = OrderedDict()
+_FOOTER_CACHE_CAP = 1024
+_FOOTER_LOCK = threading.Lock()
+
+
+def cached_footer(obj: ObjectHandle) -> parquet.FileMeta:
+    """Parse (or recall) the footer of a self-contained ARW1 object."""
+    key = (obj.osd_uid, obj.name, obj.version())
+    with _FOOTER_LOCK:
+        meta = _FOOTER_CACHE.get(key)
+        if meta is not None:
+            _FOOTER_CACHE.move_to_end(key)
+            return meta
+    meta = parquet.read_footer(obj)
+    with _FOOTER_LOCK:
+        _FOOTER_CACHE[key] = meta
+        while len(_FOOTER_CACHE) > _FOOTER_CACHE_CAP:
+            _FOOTER_CACHE.popitem(last=False)
+    return meta
+
+
+def _payload_footer(obj: ObjectHandle, payload: dict) -> parquet.FileMeta:
+    """Footer from the payload (striped layout ships the parent's) or from
+    the object itself via the version-keyed cache."""
+    raw = payload.get("footer")
+    if raw:
+        return parquet.FileMeta.deserialize(
+            raw.encode() if isinstance(raw, str) else raw)
+    return cached_footer(obj)
 
 
 def scan_op(obj: ObjectHandle, payload: dict) -> bytes:
@@ -26,12 +66,7 @@ def scan_op(obj: ObjectHandle, payload: dict) -> bytes:
               "footer": serialized FileMeta|None (striped layout passes the
               parent footer; split layout objects carry their own)}
     """
-    if payload.get("footer"):
-        meta = parquet.FileMeta.deserialize(payload["footer"].encode()
-                                            if isinstance(payload["footer"], str)
-                                            else payload["footer"])
-    else:
-        meta = parquet.read_footer(obj)
+    meta = _payload_footer(obj, payload)
     predicate = Expr.from_json(payload.get("predicate"))
     columns = payload.get("columns")
     row_groups = payload.get("row_groups")  # indices within this object
@@ -57,19 +92,14 @@ def scan_op(obj: ObjectHandle, payload: dict) -> bytes:
 def stat_op(obj: ObjectHandle, payload: dict) -> bytes:
     """Return the footer (metadata) of an ARW1 object — used by the split
     layout's .index discovery."""
-    meta = parquet.read_footer(obj)
+    meta = cached_footer(obj)
     return meta.serialize()
 
 
 def rowcount_op(obj: ObjectHandle, payload: dict) -> bytes:
     """COUNT(*) [WHERE pred] entirely on the storage node: decodes only the
     predicate columns, ships back one integer (aggregate pushdown)."""
-    if payload.get("footer"):
-        f = payload["footer"]
-        meta = parquet.FileMeta.deserialize(
-            f.encode() if isinstance(f, str) else f)
-    else:
-        meta = parquet.read_footer(obj)
+    meta = _payload_footer(obj, payload)
     pred = Expr.from_json(payload.get("predicate"))
     row_groups = payload.get("row_groups")
     metas = (meta.row_groups if row_groups is None

@@ -6,12 +6,25 @@ replica permutation, written with 3-way replication, and read from the
 primary with automatic failover to replicas.  Every OSD tracks busy-time
 and byte counters — the inputs to the paper's Fig.-6 CPU-utilization
 reproduction — and supports failure + straggler injection.
+
+Two pieces feed the adaptive scan scheduler
+(``repro.dataset.scheduler``):
+
+* **Load accounting** — each OSD tracks in-flight object-class calls
+  (queued + executing) and caps concurrent execution at its thread count;
+  ``ObjectStore.load_of`` snapshots (busy_s, inflight, straggle_factor)
+  into an :class:`OSDLoad` whose ``pressure`` is the scheduler's
+  saturation signal.
+* **Object versions** — every ``put``/``delete`` bumps a per-object
+  version counter; ``ObjectStore.version_of`` exposes it so decoded
+  result caches are invalidated by overwrites.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import threading
 import time
 import zlib
@@ -41,17 +54,56 @@ class OSDStats:
     bytes_returned: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class OSDLoad:
+    """Point-in-time load snapshot of one OSD (``ObjectStore.load_of``).
+
+    ``inflight`` counts object-class calls queued *or* executing on the
+    node; ``pressure`` is the service-time inflation the scheduler should
+    expect relative to an idle node: the straggle factor scaled by how
+    oversubscribed the node's thread pool is.
+    """
+
+    osd_id: int
+    busy_s: float
+    inflight: int
+    threads: int
+    straggle_factor: float
+    down: bool = False
+
+    @property
+    def pressure(self) -> float:
+        if self.down:
+            return float("inf")
+        qd = self.inflight / max(1, self.threads)
+        return self.straggle_factor * (1.0 + qd)
+
+
 class OSD:
-    """One storage node: object map + counters + failure/straggler knobs."""
+    """One storage node: object map + counters + failure/straggler knobs.
+
+    Object-class execution is bounded by ``threads`` concurrent calls
+    (``_cls_sem``); calls beyond that queue and show up in ``inflight`` —
+    the queue-depth signal the adaptive scheduler reads via ``load_of``.
+    """
+
+    _uids = itertools.count()    # process-unique ids (cache keys must not
+                                 # collide across clusters sharing osd_ids)
 
     def __init__(self, osd_id: int, threads: int = 8):
         self.osd_id = osd_id
+        self.uid = next(OSD._uids)
         self.threads = threads
         self._objects: dict[str, bytes] = {}
+        self._versions: dict[str, int] = {}
         self._lock = threading.Lock()
         self.stats = OSDStats()
         self.down = False
         self.straggle_factor = 1.0   # >1 = this node is slow (hedging tests)
+        self.inflight = 0            # cls calls queued + executing
+        self.background_load = 0     # simulated external clients' in-flight
+                                     # cls calls (multi-tenant benchmarks)
+        self._cls_sem = threading.BoundedSemaphore(max(1, threads))
 
     def _check(self):
         if self.down:
@@ -62,6 +114,7 @@ class OSD:
         with self._lock:
             old = self._objects.get(name)
             self._objects[name] = bytes(data)
+            self._versions[name] = self._versions.get(name, 0) + 1
             self.stats.writes += 1
             self.stats.bytes_written += len(data)
             self.stats.bytes_stored += len(data) - (len(old) if old else 0)
@@ -93,12 +146,18 @@ class OSD:
         with self._lock:
             if name in self._objects:
                 data = self._objects.pop(name)
+                self._versions[name] = self._versions.get(name, 0) + 1
                 self.stats.bytes_stored -= len(data)
                 self.stats.objects -= 1
 
     def contains(self, name: str) -> bool:
         with self._lock:
             return name in self._objects
+
+    def version(self, name: str) -> int:
+        """Monotonic per-object write counter (0 = never written here)."""
+        with self._lock:
+            return self._versions.get(name, 0)
 
     def list_objects(self) -> list[str]:
         with self._lock:
@@ -183,6 +242,24 @@ class ObjectStore:
     def exists(self, name: str) -> bool:
         return any(o.contains(name) for o in self.acting_set(name))
 
+    def version_of(self, name: str) -> int:
+        """Cluster-wide object version: the max per-replica write counter.
+        Any overwrite (or delete) advances it — result-cache keys carry it
+        so stale decoded results can never be served."""
+        return max((o.version(name) for o in self.acting_set(name)),
+                   default=0)
+
+    # -- load signals (adaptive scheduler inputs) -------------------------------
+    def load_of(self, osd: "OSD | int") -> OSDLoad:
+        """Snapshot one OSD's load: busy seconds, in-flight cls queue depth,
+        straggle factor.  ``OSDLoad.pressure`` condenses these into the
+        expected service-time inflation the scan scheduler compares against
+        a client-side scan."""
+        o = self.osds[osd] if isinstance(osd, int) else osd
+        return OSDLoad(o.osd_id, o.stats.busy_s,
+                       o.inflight + o.background_load, o.threads,
+                       o.straggle_factor, o.down)
+
     def list_objects(self) -> list[str]:
         names: set[str] = set()
         for o in self.osds:
@@ -206,14 +283,21 @@ class ObjectStore:
         for osd in candidates:
             if osd.down or not osd.contains(name):
                 continue
-            t0 = time.perf_counter()
+            with osd._lock:          # queued: visible to load_of immediately
+                osd.inflight += 1
             try:
-                result = self._cls[method](ObjectHandle(osd, name),
-                                           payload or {})
-            except OSDDownError as e:
-                err = e
-                continue
-            el = (time.perf_counter() - t0) * osd.straggle_factor
+                with osd._cls_sem:   # per-OSD concurrency = thread count
+                    t0 = time.perf_counter()
+                    try:
+                        result = self._cls[method](ObjectHandle(osd, name),
+                                                   payload or {})
+                    except OSDDownError as e:
+                        err = e
+                        continue
+                    el = (time.perf_counter() - t0) * osd.straggle_factor
+            finally:
+                with osd._lock:
+                    osd.inflight -= 1
             osd.stats.cls_calls += 1
             osd.stats.busy_s += el
             if isinstance(result, (bytes, bytearray)):
@@ -268,6 +352,19 @@ class ObjectHandle:
     def __init__(self, osd: OSD, name: str):
         self._osd = osd
         self.name = name
+
+    @property
+    def osd_id(self) -> int:
+        return self._osd.osd_id
+
+    @property
+    def osd_uid(self) -> int:
+        return self._osd.uid
+
+    def version(self) -> int:
+        """Write counter of this replica — cache keys for anything derived
+        from the object's bytes (parsed footers, decoded results)."""
+        return self._osd.version(self.name)
 
     def read(self, offset: int, length: int) -> bytes:
         return self._osd.get(self.name, offset, length)

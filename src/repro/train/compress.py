@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding import shard_map
+
 
 def _quantize(t):
     absmax = jnp.max(jnp.abs(t))
@@ -78,7 +80,7 @@ def make_compressed_grad_fn(loss_fn, mesh, *, axis: str = "pod"):
         return loss, grads, err
 
     batch_spec = jax.tree.map(lambda _: P(axis), {"tokens": 0, "labels": 0})
-    return jax.shard_map(
+    return shard_map(
         per_pod, mesh=mesh,
         in_specs=(P(), batch_spec, P()),
         out_specs=(P(), P(), P()),

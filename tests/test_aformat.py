@@ -8,6 +8,9 @@ group provably contains no matching row).
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.aformat import compression, encodings, parquet

@@ -8,9 +8,11 @@ ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
 
 
 def _run(args):
+    # generous timeout: CI containers can be CPU-throttled ~10x, and the
+    # launcher subprocesses re-pay jax compilation from scratch
     return subprocess.run([sys.executable, "-m", *args],
                           capture_output=True, text=True, env=ENV,
-                          cwd="/root/repo", timeout=480)
+                          cwd="/root/repo", timeout=1800)
 
 
 def test_train_launcher_smoke():
