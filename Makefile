@@ -3,15 +3,25 @@
 PYTHON ?= python
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test bench bench-adaptive bench-fig5 bench-fig6 deps
+.PHONY: test test-fast bench bench-adaptive bench-fig5 bench-fig6 \
+	bench-hedged deps
 
 test:
 	$(PYTHON) -m pytest -x -q
 
+# fast lane: skip the slow jax/pallas kernel and end-to-end tests so the
+# scan-path suite gives signal in minutes (CI runs this per push; the
+# full suite stays the tier-1 gate and runs nightly)
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
 
-bench: bench-fig5 bench-fig6 bench-adaptive
+bench: bench-fig5 bench-fig6 bench-adaptive bench-hedged
+
+bench-hedged:
+	$(PYTHON) benchmarks/hedged_straggler.py
 
 bench-fig5:
 	$(PYTHON) benchmarks/fig5_latency_scaling.py

@@ -1,3 +1,4 @@
+from repro.dataset.admission import AdmissionController
 from repro.dataset.dataset import Dataset, ScanMetrics, Scanner, dataset
 from repro.dataset.format import (AdaptiveFormat, FileFormat, ParquetFormat,
                                   PushdownParquetFormat, TaskRecord)
@@ -5,7 +6,7 @@ from repro.dataset.fragment import Fragment
 from repro.dataset.scheduler import (ResultCache, ScanScheduler,
                                      modeled_latency)
 
-__all__ = ["Dataset", "ScanMetrics", "Scanner", "dataset", "FileFormat",
-           "ParquetFormat", "PushdownParquetFormat", "AdaptiveFormat",
-           "TaskRecord", "Fragment", "ResultCache", "ScanScheduler",
-           "modeled_latency"]
+__all__ = ["AdmissionController", "Dataset", "ScanMetrics", "Scanner",
+           "dataset", "FileFormat", "ParquetFormat",
+           "PushdownParquetFormat", "AdaptiveFormat", "TaskRecord",
+           "Fragment", "ResultCache", "ScanScheduler", "modeled_latency"]

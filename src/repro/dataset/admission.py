@@ -1,0 +1,81 @@
+"""Per-OSD admission control for fragment scans — one policy, all formats.
+
+Every placement ultimately lands fragment work on the storage node that
+holds the object: a pushdown scan burns the node's CPU in ``scan_op``, a
+client-side scan pulls the raw column bytes off the same node, and the
+adaptive scheduler does one or the other per fragment.  The admission
+controller bounds how many fragment operations a single scan keeps
+outstanding against any one OSD (``slots_per_osd``, the Scanner's
+``queue_depth``), so a wide scan cannot bury one node in queued work
+while its replicas idle — regardless of which format issued the work.
+
+This replaces the old ``PushdownParquetFormat``-only semaphore special
+case inside ``Scanner.to_table``: the controller is created per scan and
+threaded through ``FileFormat.scan_fragment(..., admission=)``, so the
+throttle lives where the storage interaction actually happens (a cache
+hit in the adaptive format, for instance, never takes a slot).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+from repro.storage.objstore import ObjectStore
+
+
+class AdmissionController:
+    """Bounded per-OSD in-flight slots shared by every placement.
+
+    ``admit(osd_id)`` is a context manager holding one slot on that node
+    for the duration of the fragment operation.  ``waits`` counts the
+    acquisitions that actually blocked — the backpressure signal surfaced
+    in scan metrics.
+    """
+
+    def __init__(self, store: ObjectStore, slots_per_osd: int = 4):
+        self.store = store
+        self.slots_per_osd = max(1, slots_per_osd)
+        self._sems: dict[int, threading.Semaphore] = {}
+        self._lock = threading.Lock()
+        self.admitted = 0
+        self.waits = 0
+
+    def _sem(self, osd_id: int) -> threading.Semaphore:
+        with self._lock:
+            sem = self._sems.get(osd_id)
+            if sem is None:
+                sem = threading.Semaphore(self.slots_per_osd)
+                self._sems[osd_id] = sem
+            return sem
+
+    @contextlib.contextmanager
+    def admit(self, osd_id: int):
+        sem = self._sem(osd_id)
+        if not sem.acquire(blocking=False):
+            with self._lock:
+                self.waits += 1
+            sem.acquire()
+        with self._lock:
+            self.admitted += 1
+        try:
+            yield
+        finally:
+            sem.release()
+
+    @contextlib.contextmanager
+    def admit_object(self, name: str):
+        """Admit against the node a fragment operation will land on: the
+        first up replica holding the object (the same choice ``get`` and
+        ``cls_call`` make)."""
+        target = next((o for o in self.store.acting_set(name)
+                       if not o.down and o.contains(name)), None)
+        if target is None:           # failover path decides; don't gate
+            yield
+            return
+        with self.admit(target.osd_id):
+            yield
+
+    def stats(self) -> dict:
+        return {"slots_per_osd": self.slots_per_osd,
+                "admitted": self.admitted, "waits": self.waits}

@@ -21,8 +21,9 @@ import dataclasses
 import struct
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Sequence
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from itertools import islice
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -30,6 +31,7 @@ from repro.aformat import parquet
 from repro.aformat.expressions import ALL, NONE, Expr
 from repro.aformat.schema import Schema
 from repro.aformat.table import Column, Table
+from repro.dataset.admission import AdmissionController
 from repro.dataset.format import (AdaptiveFormat, FileFormat, ParquetFormat,
                                   PushdownParquetFormat, TaskRecord)
 from repro.dataset.fragment import Fragment
@@ -192,6 +194,7 @@ class ScanMetrics:
     discovery_bytes: int = 0
     rows: int = 0
     wall_s: float = 0.0
+    admission: dict = dataclasses.field(default_factory=dict)
 
     @property
     def client_cpu_s(self) -> float:
@@ -224,6 +227,7 @@ class ScanMetrics:
             "wall_s": round(self.wall_s, 4),
             "cache_hits": self.cache_hits,
             "hedged": self.hedged_tasks,
+            "admission_waits": self.admission.get("waits", 0),
         }
 
 
@@ -260,59 +264,92 @@ class Scanner:
         return out
 
     # -- execution ---------------------------------------------------------------
-    def to_table(self) -> Table:
+    def _admission(self) -> AdmissionController:
+        """One admission controller per scan: every placement (client
+        byte-pulls, pushdown cls calls, adaptive either-way) draws from
+        the same bounded per-OSD slots, so no format can bury a single
+        storage node in queued fragment work."""
+        return AdmissionController(self.ds.fs.store, self.queue_depth)
+
+    def _scan_stream(self, max_inflight: int
+                     ) -> Iterator[tuple[int, Table]]:
+        """Concurrent streaming execution: at most ``max_inflight``
+        fragments are in flight at once, and a new fragment is issued only
+        when a finished one has been *consumed* — backpressure, so peak
+        client memory is O(in-flight fragments), not O(dataset).
+
+        Yields (plan index, Table) in completion order, empty results
+        included (callers filter)."""
         plan = self.plan()
-        store = self.ds.fs.store
+        admission = self._admission()
         lock = threading.Lock()
-        sems: dict[int, threading.Semaphore] = {}
-        # static pushdown scans honour a bounded per-node queue depth.
-        # The adaptive format is NOT throttled here: fragments it serves
-        # from cache or routes client-side never touch the node, and its
-        # storage-side calls are already capped per OSD by the store's own
-        # concurrency limit (OSD._cls_sem)
-        use_qd = isinstance(self.fmt, PushdownParquetFormat)
 
-        def node_sem(frag: Fragment) -> threading.Semaphore | None:
-            if not use_qd:
-                return None
-            name = self.ds.fs.object_names(frag.path)[frag.obj_idx]
-            osd = store.primary_of(name)
-            with lock:
-                if osd.osd_id not in sems:
-                    sems[osd.osd_id] = threading.Semaphore(self.queue_depth)
-                return sems[osd.osd_id]
-
-        def run(item):
-            frag, pred = item
-            sem = node_sem(frag)
-            if sem is not None:
-                sem.acquire()
-            try:
-                tbl, rec = self.fmt.scan_fragment(self.ds.fs, frag,
-                                                  self.columns, pred)
-            finally:
-                if sem is not None:
-                    sem.release()
+        def run(idx_item):
+            idx, (frag, pred) = idx_item
+            tbl, rec = self.fmt.scan_fragment(self.ds.fs, frag,
+                                              self.columns, pred,
+                                              admission=admission)
             with lock:
                 self.metrics.tasks.append(rec)
-            return tbl
+            return idx, tbl
 
         t0 = time.perf_counter()
-        if self.num_threads <= 1 or len(plan) <= 1:
-            parts = [run(i) for i in plan]
-        else:
-            with ThreadPoolExecutor(max_workers=self.num_threads) as pool:
-                parts = list(pool.map(run, plan))
-        parts = [p for p in parts if len(p)]
-        if parts:
-            result = Table.concat(parts)
+        items = list(enumerate(plan))
+        try:
+            if max_inflight <= 1 or len(items) <= 1:
+                for it in items:
+                    idx, tbl = run(it)
+                    self.metrics.rows += len(tbl)
+                    yield idx, tbl
+                return
+            it = iter(items)
+            with ThreadPoolExecutor(max_workers=max_inflight) as pool:
+                pending = {pool.submit(run, x)
+                           for x in islice(it, max_inflight)}
+                try:
+                    while pending:
+                        done, pending = wait(pending,
+                                             return_when=FIRST_COMPLETED)
+                        for fut in done:
+                            idx, tbl = fut.result()
+                            nxt = next(it, None)
+                            if nxt is not None:
+                                pending.add(pool.submit(run, nxt))
+                            self.metrics.rows += len(tbl)
+                            yield idx, tbl
+                finally:
+                    for fut in pending:   # consumer stopped early
+                        fut.cancel()
+        finally:
+            self.metrics.wall_s = time.perf_counter() - t0
+            self.metrics.admission = admission.stats()
+
+    def to_batches(self, *, max_inflight: int | None = None
+                   ) -> Iterator[Table]:
+        """Stream the scan as an iterator of per-fragment Tables in
+        completion order.  In-flight work is bounded by ``max_inflight``
+        (default: the scanner's ``num_threads``) and driven by
+        consumption: a paused consumer pauses the scan after at most
+        ``max_inflight`` buffered fragments.  Empty fragments are
+        skipped."""
+        for _, tbl in self._scan_stream(max_inflight or self.num_threads):
+            if len(tbl):
+                yield tbl
+
+    def to_table(self) -> Table:
+        """Materialize the full result (built on the streaming engine;
+        partial tables are re-assembled in plan order)."""
+        parts = sorted(self._scan_stream(self.num_threads),
+                       key=lambda p: p[0])
+        tables = [t for _, t in parts if len(t)]
+        if tables:
+            result = Table.concat(tables)
         else:
             names = self.columns or self.ds.schema.names
             sch = self.ds.schema.select(names)
             result = Table(sch, [
                 Column(f, np.empty(0, object if f.type == "string"
                                    else f.numpy_dtype)) for f in sch])
-        self.metrics.wall_s = time.perf_counter() - t0
         self.metrics.rows = len(result)
         return result
 
@@ -321,18 +358,24 @@ class Scanner:
         of the paper's scan_op).
 
         Per fragment: stats prove ALL -> count from metadata with zero
-        I/O; stats prove NONE -> pruned; otherwise ``rowcount_op`` runs on
-        the storage node and only an integer crosses the wire.  Falls back
-        to a materializing scan for the client-side format."""
+        I/O; stats prove NONE -> pruned; otherwise only an integer
+        crosses the wire — via ``rowcount_op`` on the storage node for
+        the static pushdown format, or via the adaptive scheduler
+        (placement-priced, hedged, result-cached) for
+        ``format="adaptive"``.  Only the client-side format falls back to
+        a materializing scan."""
         import json
 
         from repro.storage.cephfs import DirectObjectAccess
 
+        if isinstance(self.fmt, AdaptiveFormat):
+            return self._count_rows_adaptive()
         if not isinstance(self.fmt, PushdownParquetFormat):
             return len(self.to_table())
         total = 0
         self.metrics.fragments_total = len(self.ds._fragments)
         doa = DirectObjectAccess(self.ds.fs)
+        admission = self._admission()
         for frag in self.ds._fragments:
             pred = self.predicate
             if pred is None:
@@ -352,11 +395,46 @@ class Scanner:
             }
             if frag.footer is not None:
                 payload["footer"] = frag.footer.serialize()
-            out, osd_id, el = doa.call(frag.path, frag.obj_idx,
-                                       "rowcount_op", payload)
+            name = self.ds.fs.object_names(frag.path)[frag.obj_idx]
+            with admission.admit_object(name):
+                out, osd_id, el = doa.call(frag.path, frag.obj_idx,
+                                           "rowcount_op", payload)
             n = json.loads(out)["rows"]
             self.metrics.tasks.append(TaskRecord(
                 "osd", osd_id, el, len(out), 0.0, n))
             total += n
         self.metrics.rows = total
+        self.metrics.admission = admission.stats()
+        return total
+
+    def _count_rows_adaptive(self) -> int:
+        """COUNT(*) through the adaptive scheduler: metadata-provable
+        fragments never leave the client, everything else is a
+        placement-priced, result-cached ``rowcount_op`` — fanned out over
+        ``num_threads`` like a scan (admission bounds per-OSD pressure)."""
+        sched = self.fmt.scheduler_for(self.ds.fs)
+        admission = self._admission()
+        lock = threading.Lock()
+        total = 0
+        remote: list[tuple[Fragment, Expr]] = []
+        for frag, pred in self.plan():      # same pruning as every scan
+            if pred is None:
+                total += frag.num_rows      # metadata-only count
+            else:
+                remote.append((frag, pred))
+
+        def run(item):
+            frag, pred = item
+            n, rec = sched.count_fragment(frag, pred, admission=admission)
+            with lock:
+                self.metrics.tasks.append(rec)
+            return n
+
+        if len(remote) <= 1 or self.num_threads <= 1:
+            total += sum(run(x) for x in remote)
+        else:
+            with ThreadPoolExecutor(max_workers=self.num_threads) as pool:
+                total += sum(pool.map(run, remote))
+        self.metrics.rows = total
+        self.metrics.admission = admission.stats()
         return total

@@ -16,6 +16,7 @@ Dataset/Scanner API changes (paper §2.2, RadosParquetFileFormat).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
@@ -43,14 +44,29 @@ class TaskRecord:
 
 
 class FileFormat:
-    """Scan a fragment; returns (Table, TaskRecord)."""
+    """Scan a fragment; returns (Table, TaskRecord).
+
+    ``admission`` (an :class:`~repro.dataset.admission.AdmissionController`
+    or None) bounds in-flight fragment operations per storage node; every
+    format acquires a slot on the node it is about to touch — storage-side
+    cls calls and client-side byte pulls alike."""
 
     name = "abstract"
 
     def scan_fragment(self, fs: CephFS, frag: Fragment,
                       columns: Sequence[str] | None,
-                      predicate: Expr | None) -> tuple[Table, TaskRecord]:
+                      predicate: Expr | None,
+                      admission=None) -> tuple[Table, TaskRecord]:
         raise NotImplementedError
+
+
+def _admit_fragment(fs: CephFS, frag: Fragment, admission):
+    """Slot on the OSD this fragment's bytes live on (no-op without an
+    admission controller)."""
+    if admission is None:
+        return contextlib.nullcontext()
+    name = fs.object_names(frag.path)[frag.obj_idx]
+    return admission.admit_object(name)
 
 
 class ParquetFormat(FileFormat):
@@ -59,7 +75,7 @@ class ParquetFormat(FileFormat):
 
     name = "parquet"
 
-    def scan_fragment(self, fs, frag, columns, predicate):
+    def scan_fragment(self, fs, frag, columns, predicate, admission=None):
         wire = 0
 
         def on_read(n):
@@ -67,13 +83,14 @@ class ParquetFormat(FileFormat):
             wire += n
 
         src = FileSource(fs, frag.path, on_read=on_read)
-        t0 = time.perf_counter()
-        meta = frag.client_meta
-        if meta is None:
-            meta = parquet.read_footer(src)
-        rg = meta.row_groups[frag.client_rg_index]
-        tbl = parquet.scan_row_group(src, meta, rg, columns, predicate)
-        cpu = time.perf_counter() - t0
+        with _admit_fragment(fs, frag, admission):
+            t0 = time.perf_counter()
+            meta = frag.client_meta
+            if meta is None:
+                meta = parquet.read_footer(src)
+            rg = meta.row_groups[frag.client_rg_index]
+            tbl = parquet.scan_row_group(src, meta, rg, columns, predicate)
+            cpu = time.perf_counter() - t0
         rec = TaskRecord("client", -1, cpu, wire, cpu, len(tbl))
         return tbl, rec
 
@@ -102,17 +119,18 @@ class PushdownParquetFormat(FileFormat):
     def __init__(self, *, hedge_threshold_s: float | None = None):
         self.hedge_threshold_s = hedge_threshold_s
 
-    def scan_fragment(self, fs, frag, columns, predicate):
+    def scan_fragment(self, fs, frag, columns, predicate, admission=None):
         doa = DirectObjectAccess(fs)
         payload = scan_payload(frag, columns, predicate)
-        if self.hedge_threshold_s is not None:
-            result, osd_id, el, hedged = doa.call_hedged(
-                frag.path, frag.obj_idx, "scan_op", payload,
-                hedge_threshold_s=self.hedge_threshold_s)
-        else:
-            result, osd_id, el = doa.call(frag.path, frag.obj_idx,
-                                          "scan_op", payload)
-            hedged = False
+        with _admit_fragment(fs, frag, admission):
+            if self.hedge_threshold_s is not None:
+                result, osd_id, el, hedged = doa.call_hedged(
+                    frag.path, frag.obj_idx, "scan_op", payload,
+                    hedge_threshold_s=self.hedge_threshold_s)
+            else:
+                result, osd_id, el = doa.call(frag.path, frag.obj_idx,
+                                              "scan_op", payload)
+                hedged = False
         t0 = time.perf_counter()
         tbl = Table.from_ipc(result)
         client_cpu = time.perf_counter() - t0
@@ -152,9 +170,10 @@ class AdaptiveFormat(FileFormat):
                 self._schedulers[id(fs)] = sched
             return sched
 
-    def scan_fragment(self, fs, frag, columns, predicate):
+    def scan_fragment(self, fs, frag, columns, predicate, admission=None):
         return self.scheduler_for(fs).scan_fragment(frag, columns,
-                                                    predicate)
+                                                    predicate,
+                                                    admission=admission)
 
     def stats(self) -> dict:
         """Decision/hedge/cache counters, summed across every cluster

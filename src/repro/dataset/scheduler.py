@@ -58,6 +58,7 @@ same way the two static placements do.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
@@ -233,7 +234,8 @@ class ScanScheduler:
         """Aggregate scan-thread capacity of the up part of the cluster."""
         return sum(o.threads for o in self.store.osds if not o.down) or 1
 
-    def estimate(self, frag: Fragment) -> PlacementEstimate:
+    def estimate(self, frag: Fragment, *,
+                 out_bytes: float | None = None) -> PlacementEstimate:
         """Price both placements for this fragment from live load and the
         learned decode-rate / selectivity estimates.
 
@@ -241,11 +243,14 @@ class ScanScheduler:
         (k-server view, as in ``storage.perfmodel``): storage decode
         spreads over the cluster's threads but is inflated by multi-tenant
         pressure; client decode spreads over the client's private threads
-        but its NIC must carry the raw bytes."""
+        but its NIC must carry the raw bytes.  ``out_bytes`` overrides the
+        learned selectivity estimate when the caller knows the result size
+        (an aggregate ships back a constant few bytes)."""
         in_bytes = self._frag_bytes(frag)
         rate = self._decode_rate.value(DEFAULT_DECODE_RATE)
         decode_s = in_bytes / max(rate, 1.0)
-        out_bytes = in_bytes * self._out_ratio.value(DEFAULT_OUT_RATIO)
+        if out_bytes is None:
+            out_bytes = in_bytes * self._out_ratio.value(DEFAULT_OUT_RATIO)
         pressure = self.pressure_of(frag)
         est_osd = max(decode_s * pressure / self.storage_threads(),
                       out_bytes / self.net_bw)
@@ -292,11 +297,13 @@ class ScanScheduler:
     # -- the scan ---------------------------------------------------------------
     def scan_fragment(self, frag: Fragment,
                       columns: Sequence[str] | None,
-                      predicate: Expr | None) -> tuple[Table, TaskRecord]:
+                      predicate: Expr | None,
+                      admission=None) -> tuple[Table, TaskRecord]:
         """Cache lookup -> placement decision -> (hedged) execution.
 
         Returns the same (Table, TaskRecord) contract as a FileFormat, so
-        ``AdaptiveFormat`` is a drop-in placement."""
+        ``AdaptiveFormat`` is a drop-in placement.  ``admission`` bounds
+        in-flight work per OSD; a cache hit never takes a slot."""
         key = self.cache_key(frag, columns, predicate)
         ipc = self.cache.get(key)
         if ipc is not None:
@@ -310,23 +317,27 @@ class ScanScheduler:
             return tbl, rec
 
         est = self.estimate(frag)
-        ipc = None
-        if est.where == "osd":
-            try:
-                tbl, rec, ipc = self._scan_osd(frag, columns, predicate,
-                                               est)
-            except (OSDDownError, ObjectNotFound):
-                # storage path unavailable (e.g. every replica died after
-                # the estimate): client-side still reads via failover
-                with self._lock:
-                    self.fallbacks += 1
-                tbl, rec = self._scan_client(frag, columns, predicate)
-        else:
-            tbl, rec = self._scan_client(frag, columns, predicate)
-        # the storage path already returned IPC bytes; the client path
-        # pays one encode to make the result cacheable
-        self.cache.put(key, ipc if ipc is not None else tbl.to_ipc())
+        with self._admit(frag, admission):
+            if est.where == "osd":
+                try:
+                    tbl, rec, ipc = self._scan_osd(frag, columns,
+                                                   predicate, est)
+                except (OSDDownError, ObjectNotFound):
+                    # storage path unavailable (e.g. every replica died
+                    # after the estimate): client-side reads via failover
+                    with self._lock:
+                        self.fallbacks += 1
+                    tbl, rec, ipc = self._scan_client(frag, columns,
+                                                      predicate)
+            else:
+                tbl, rec, ipc = self._scan_client(frag, columns, predicate)
+        self.cache.put(key, ipc)
         return tbl, rec
+
+    def _admit(self, frag: Fragment, admission):
+        if admission is None:
+            return contextlib.nullcontext()
+        return admission.admit_object(self._object_name(frag))
 
     def _scan_osd(self, frag, columns, predicate, est):
         payload = scan_payload(frag, columns, predicate)
@@ -358,10 +369,98 @@ class ScanScheduler:
     def _scan_client(self, frag, columns, predicate):
         tbl, rec = self._client_fmt.scan_fragment(self.fs, frag, columns,
                                                   predicate)
+        ipc = tbl.to_ipc()
         with self._lock:
             self.decisions["client"] += 1
-        self._observe(rec.wire_bytes, rec.cpu_s, tbl.nbytes())
-        return tbl, rec
+        # both paths feed the estimators in the *same units*: stored
+        # fragment bytes in, Arrow-IPC bytes out (the storage node runs
+        # the same decode code, so observations must be interchangeable —
+        # wire bytes / raw nbytes would skew the shared EWMAs)
+        self._observe(self._frag_bytes(frag), rec.cpu_s, len(ipc))
+        return tbl, rec, ipc
+
+    # -- aggregate pushdown -----------------------------------------------------
+    _ROWCOUNT_COLS = ("__rowcount__",)   # cache-key column sentinel: a
+                                         # count shares nothing with a scan
+
+    def count_fragment(self, frag: Fragment, predicate: Expr | None,
+                       admission=None) -> tuple[int, TaskRecord]:
+        """COUNT(*) for one fragment with the same placement machinery as
+        a scan: priced (with the aggregate's tiny result size), hedged,
+        and result-cached — so ``count_rows`` under ``format="adaptive"``
+        ships integers, not materialized tables.
+
+        Returns (row count, TaskRecord)."""
+        if predicate is None:       # metadata answers; no I/O at all
+            return frag.num_rows, TaskRecord("client", -1, 0.0, 0, 0.0,
+                                             frag.num_rows, cached=True)
+        key = self.cache_key(frag, self._ROWCOUNT_COLS, predicate)
+        cached = self.cache.get(key)
+        if cached is not None:
+            n = int(json.loads(cached)["rows"])
+            with self._lock:
+                self.decisions["cache"] += 1
+            return n, TaskRecord("client", -1, 0.0, 0, 0.0, n, cached=True)
+
+        # an aggregate returns a constant-size payload: the storage-side
+        # estimate carries ~no wire cost, so pushdown wins unless the
+        # nodes are badly saturated
+        est = self.estimate(frag, out_bytes=32)
+        with self._admit(frag, admission):
+            if est.where == "osd":
+                try:
+                    n, rec, raw = self._count_osd(frag, predicate, est)
+                except (OSDDownError, ObjectNotFound):
+                    with self._lock:
+                        self.fallbacks += 1
+                    n, rec, raw = self._count_client(frag, predicate)
+            else:
+                n, rec, raw = self._count_client(frag, predicate)
+        self.cache.put(key, raw)
+        return n, rec
+
+    def _count_osd(self, frag, predicate, est):
+        payload: dict = {
+            "predicate": predicate.to_json()
+            if predicate is not None else None,
+            "row_groups": [frag.rg_in_object],
+        }
+        if frag.footer is not None:
+            payload["footer"] = frag.footer.serialize()
+        deadline = self._hedge_deadline(est.in_bytes)
+        if deadline is None:
+            raw, osd_id, el = self.doa.call(frag.path, frag.obj_idx,
+                                            "rowcount_op", payload)
+            hedged = False
+        else:
+            raw, osd_id, el, hedged = self.doa.call_hedged(
+                frag.path, frag.obj_idx, "rowcount_op", payload,
+                hedge_threshold_s=deadline)
+        n = int(json.loads(raw)["rows"])
+        with self._lock:
+            self.decisions["osd"] += 1
+            if hedged:
+                self.hedges += 1
+        # counts decode a single column: their latency is not a full-scan
+        # observation, so neither the hedge history nor the decode-rate
+        # EWMA is updated here
+        rec = TaskRecord("osd", osd_id, el, len(raw), 0.0, n,
+                         hedged=hedged)
+        return n, rec, raw
+
+    def _count_client(self, frag, predicate):
+        """Fallback count: client-side decode of just the (first)
+        predicate column (``count_fragment`` answered the predicate-less
+        case from metadata already)."""
+        cols = sorted(predicate.columns())[:1]
+        tbl, rec = self._client_fmt.scan_fragment(self.fs, frag, cols,
+                                                  predicate)
+        n = len(tbl)
+        with self._lock:
+            self.decisions["client"] += 1
+        raw = json.dumps({"rows": n}).encode()
+        return n, TaskRecord("client", -1, rec.cpu_s, rec.wire_bytes,
+                             rec.client_cpu_s, n), raw
 
     # -- reporting ---------------------------------------------------------------
     def stats(self) -> dict:

@@ -58,24 +58,39 @@ def ingest_prompts(ds: Dataset, *, format="adaptive",
     scheduler routes each fragment by live OSD load and repeat ingests
     hit its result cache — the "adaptive" string builds a fresh scheduler
     per call, which routes adaptively but cannot cache across calls.
-    Returns (requests, scan_metrics).
+
+    The scan *streams* through ``Scanner.to_batches`` — fragments are
+    grouped into per-uid buffers as they land, so peak memory is the
+    grouped output plus O(in-flight fragments), never a materialized
+    whole-dataset Table.  Returns (requests, scan_metrics).
     """
     sc = ds.scanner(format=format, columns=[uid_col, pos_col, token_col],
                     predicate=predicate, num_threads=num_threads)
-    tbl = sc.to_table()
-    uids = tbl.column(uid_col).values
-    pos = tbl.column(pos_col).values
-    toks = tbl.column(token_col).values
-    # single O(N log N) grouping pass: sort by (uid, pos), split at uid
-    # boundaries (a per-uid boolean mask would be O(U x N))
-    order = np.lexsort((pos, uids))
-    uids, toks = uids[order], toks[order].astype(np.int32)
-    bounds = np.flatnonzero(np.diff(uids)) + 1
-    reqs = [Request(int(group_uids[0]), group_toks,
-                    max_new_tokens=max_new_tokens, eos_id=eos_id)
-            for group_uids, group_toks
-            in zip(np.split(uids, bounds), np.split(toks, bounds))
-            if len(group_uids)]
+    # per-uid accumulation, one batch at a time: each fragment is grouped
+    # (sort by (uid, pos), split at uid boundaries) and immediately folded
+    # into its uid's buffer list
+    groups: dict[int, list[tuple[np.ndarray, np.ndarray]]] = {}
+    for tbl in sc.to_batches():
+        uids = tbl.column(uid_col).values
+        pos = tbl.column(pos_col).values
+        toks = tbl.column(token_col).values
+        order = np.lexsort((pos, uids))
+        uids, pos = uids[order], pos[order]
+        toks = toks[order].astype(np.int32)
+        bounds = np.flatnonzero(np.diff(uids)) + 1
+        for g_uids, g_pos, g_toks in zip(np.split(uids, bounds),
+                                         np.split(pos, bounds),
+                                         np.split(toks, bounds)):
+            if len(g_uids):
+                groups.setdefault(int(g_uids[0]), []).append(
+                    (g_pos, g_toks))
+    reqs = []
+    for uid in sorted(groups):
+        parts = groups[uid]
+        pos = np.concatenate([p for p, _ in parts])
+        toks = np.concatenate([t for _, t in parts])
+        reqs.append(Request(uid, toks[np.argsort(pos, kind="stable")],
+                            max_new_tokens=max_new_tokens, eos_id=eos_id))
     return reqs, sc.metrics
 
 

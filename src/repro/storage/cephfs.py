@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor
+from concurrent.futures import wait as futures_wait
 from typing import Any, Callable
 
 from repro.storage.objstore import ObjectNotFound, ObjectStore
@@ -162,25 +164,95 @@ class DirectObjectAccess:
     def call_hedged(self, path: str, idx: int, method: str,
                     payload: dict | None = None, *,
                     hedge_threshold_s: float = 0.05):
-        """Straggler-mitigated cls call: run on the primary; if its
-        (modeled) service time exceeds the hedge threshold, re-issue on the
-        next replica and keep the faster result.  Both executions burn
-        storage CPU — hedging trades duplicated work for tail latency,
-        exactly like Ceph read hedging against replicas.
+        """Straggler-mitigated cls call with *first-wins racing*: issue the
+        call on the primary; if it has not completed within the hedge
+        deadline, issue the same call on a replica **while the primary is
+        still running** and return whichever finishes first.  Wall time is
+        therefore ``min(primary, deadline + backup)`` — never the sum.
+
+        The loser keeps running on its node (an in-flight cls call cannot
+        be revoked, exactly as in Ceph): its service time still lands in
+        the node's ``busy_s`` and is additionally recorded as
+        ``hedge_wasted_s`` — the duplicated storage CPU hedging trades for
+        tail latency.
 
         Returns (result, osd_id, elapsed_s, hedged_bool)."""
         name = self.fs.object_names(path)[idx]
-        result, osd_id, el = self.store.cls_call(name, method, payload)
-        if el <= hedge_threshold_s:
+        store = self.store
+
+        acting = store.acting_set(name)
+        # the OSD cls_call will execute on: first up replica holding the
+        # object (needed up front so the hedge goes somewhere *else*)
+        primary = next((o for o in acting
+                        if not o.down and o.contains(name)), None)
+        fut1 = _hedge_pool().submit(store.cls_call, name, method, payload)
+        done, _ = futures_wait([fut1], timeout=hedge_threshold_s)
+        if fut1 in done or primary is None:
+            result, osd_id, el = fut1.result()   # may raise: no racing yet
             return result, osd_id, el, False
-        acting = self.store.acting_set(name)
+
         backup = next((o for o in acting
-                       if o.osd_id != osd_id and not o.down
+                       if o.osd_id != primary.osd_id and not o.down
                        and o.contains(name)), None)
         if backup is None:
+            result, osd_id, el = fut1.result()
             return result, osd_id, el, False
-        r2, id2, el2 = self.store.cls_call(name, method, payload,
-                                           prefer_osd=backup)
-        if el2 < el:
-            return r2, id2, el2, True
+        fut2 = _hedge_pool().submit(store.cls_call, name, method, payload,
+                                    prefer_osd=backup)
+
+        pending = {fut1, fut2}
+        err: Exception | None = None
+        winner: Future | None = None
+        losers: list[Future] = []
+        while pending and winner is None:
+            done, pending = futures_wait(pending,
+                                         return_when=FIRST_COMPLETED)
+            for fut in done:
+                exc = fut.exception()
+                if exc is not None:
+                    err = exc
+                elif winner is None:
+                    winner = fut
+                else:
+                    losers.append(fut)
+        if winner is None:
+            raise err if err else ObjectNotFound(name)
+        waste = _account_hedge_waste(store)
+        for loser in pending:          # still running: book when it lands
+            loser.add_done_callback(waste)
+        for loser in losers:           # finished in the same wait round
+            waste(loser)
+        result, osd_id, el = winner.result()
         return result, osd_id, el, True
+
+
+def _account_hedge_waste(store: ObjectStore):
+    """Done-callback for a losing hedge call: its service time is
+    duplicated storage CPU — book it on the node that burned it."""
+
+    def cb(fut: Future):
+        if fut.cancelled() or fut.exception() is not None:
+            return
+        _, osd_id, el = fut.result()
+        osd = store.osds[osd_id]
+        with osd._lock:     # callbacks run on foreign hedge-pool threads
+            osd.stats.hedge_wasted_s += el
+
+    return cb
+
+
+_HEDGE_POOL: ThreadPoolExecutor | None = None
+_HEDGE_POOL_LOCK = threading.Lock()
+
+
+def _hedge_pool() -> ThreadPoolExecutor:
+    """Process-wide executor for racing hedged cls calls.  Sized well past
+    any single scan's parallelism: a slot is held for the full (possibly
+    straggling) call, and an exhausted pool would serialize the very races
+    it exists to run."""
+    global _HEDGE_POOL
+    with _HEDGE_POOL_LOCK:
+        if _HEDGE_POOL is None:
+            _HEDGE_POOL = ThreadPoolExecutor(max_workers=128,
+                                             thread_name_prefix="hedge")
+        return _HEDGE_POOL

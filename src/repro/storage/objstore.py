@@ -52,6 +52,9 @@ class OSDStats:
     bytes_read: int = 0
     bytes_written: int = 0
     bytes_returned: int = 0
+    hedge_wasted_s: float = 0.0   # busy time burned by losing hedge calls
+                                  # (duplicated work, Fig.-6 accounting)
+    repaired: int = 0             # objects healed onto this OSD by recovery
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +103,11 @@ class OSD:
         self.stats = OSDStats()
         self.down = False
         self.straggle_factor = 1.0   # >1 = this node is slow (hedging tests)
+        self.max_straggle_delay_s = 0.25   # cap on the *real* injected wall
+                                     # delay per cls call, so pathological
+                                     # factors (1e6 in tests) model huge
+                                     # service times without actually
+                                     # sleeping them out
         self.inflight = 0            # cls calls queued + executing
         self.background_load = 0     # simulated external clients' in-flight
                                      # cls calls (multi-tenant benchmarks)
@@ -153,6 +161,39 @@ class OSD:
     def contains(self, name: str) -> bool:
         with self._lock:
             return name in self._objects
+
+    def peek(self, name: str) -> bytes:
+        """Read object bytes for cluster-internal traffic (scrub, recovery)
+        without touching the client-visible read counters — Fig.-6 replays
+        ``reads``/``bytes_read`` as client load, and background maintenance
+        must not pollute them."""
+        self._check()
+        with self._lock:
+            if name not in self._objects:
+                raise ObjectNotFound(name)
+            return self._objects[name]
+
+    def repair(self, name: str, data: bytes | None, version: int):
+        """Install (or, with ``data=None``, remove) an object copy at an
+        exact peer version — the recovery path.  Unlike ``put`` this never
+        *bumps* the version counter: recovery restores replica agreement,
+        it is not a new write, so result/footer caches keyed on the
+        version must not be spuriously invalidated."""
+        with self._lock:
+            old = self._objects.get(name)
+            if data is None:
+                if old is not None:
+                    self._objects.pop(name)
+                    self.stats.bytes_stored -= len(old)
+                    self.stats.objects -= 1
+            else:
+                self._objects[name] = bytes(data)
+                self.stats.bytes_stored += len(data) - \
+                    (len(old) if old is not None else 0)
+                if old is None:
+                    self.stats.objects += 1
+            self._versions[name] = version
+            self.stats.repaired += 1
 
     def version(self, name: str) -> int:
         """Monotonic per-object write counter (0 = never written here)."""
@@ -294,7 +335,13 @@ class ObjectStore:
                     except OSDDownError as e:
                         err = e
                         continue
-                    el = (time.perf_counter() - t0) * osd.straggle_factor
+                    raw = time.perf_counter() - t0
+                    el = raw * osd.straggle_factor
+                    if osd.straggle_factor > 1.0:
+                        # a straggler is *actually* slow: burn bounded real
+                        # wall time while holding the execution slot, so
+                        # hedging races have something real to overlap
+                        time.sleep(min(el - raw, osd.max_straggle_delay_s))
             finally:
                 with osd._lock:
                     osd.inflight -= 1
@@ -309,28 +356,63 @@ class ObjectStore:
     def fail_osd(self, osd_id: int):
         self.osds[osd_id].down = True
 
-    def recover_osd(self, osd_id: int):
-        self.osds[osd_id].down = False
-        # re-replicate: pull objects this OSD should hold from peers
+    def recover_osd(self, osd_id: int) -> int:
+        """Bring an OSD back and re-sync every object it participates in.
+
+        Recovery compares this replica against its up peers by *version*
+        (every overwrite while the node was down advanced the peers') and,
+        at equal versions, by checksum (bit rot).  Missing and stale copies
+        are both healed via :meth:`OSD.repair`, which installs the bytes at
+        the authoritative peer version rather than ``put``-bumping it —
+        a recovery must restore agreement, not look like a new write that
+        spuriously invalidates result/footer caches.  Objects deleted
+        while the node was down are removed.  Returns objects healed."""
+        me = self.osds[osd_id]
+        me.down = False
         healed = 0
-        for name in self.list_objects():
+        # union of what the cluster knows and what this OSD holds: a local
+        # object deleted cluster-wide while we were down is only visible
+        # on our side
+        names = set(self.list_objects()) | set(me.list_objects())
+        for name in sorted(names):
             acting = self.acting_set(name)
-            me = self.osds[osd_id]
-            if me in acting and not me.contains(name):
-                data = self.get(name)
-                me.put(name, data)
-                healed += 1
+            if me not in acting:
+                continue
+            peers = [o for o in acting
+                     if o is not me and not o.down]
+            holders = [o for o in peers if o.contains(name)]
+            if holders:
+                best = max(holders, key=lambda o: o.version(name))
+                bv = best.version(name)
+                if not me.contains(name):
+                    me.repair(name, best.peek(name), bv)
+                    healed += 1
+                elif me.version(name) < bv or \
+                        zlib.crc32(me.peek(name)) != \
+                        zlib.crc32(best.peek(name)):
+                    me.repair(name, best.peek(name), bv)
+                    healed += 1
+            else:
+                # no up peer holds it: deleted while we were down if any
+                # peer's version counter moved past ours
+                pv = max((o.version(name) for o in peers), default=0)
+                if me.contains(name) and pv > me.version(name):
+                    me.repair(name, None, pv)
+                    healed += 1
         return healed
 
     def scrub(self) -> list[str]:
-        """Verify replica consistency via checksums; returns bad objects."""
+        """Verify replica consistency via checksums; returns bad objects.
+        Reads replicas through :meth:`OSD.peek` so background verification
+        never inflates the client-visible ``reads``/``bytes_read`` stats
+        the Fig.-6 accounting replays."""
         bad = []
         for name in self.list_objects():
             sums = set()
             for osd in self.acting_set(name):
                 if osd.down or not osd.contains(name):
                     continue
-                sums.add(zlib.crc32(osd.get(name)))
+                sums.add(zlib.crc32(osd.peek(name)))
             if len(sums) > 1:
                 bad.append(name)
         return bad

@@ -8,6 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# slow lane: jax/pallas compile-heavy; skipped by `make test-fast` / CI per-push
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, smoke_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import api as model_api

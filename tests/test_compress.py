@@ -1,7 +1,11 @@
 """int8 error-feedback gradient compression: wire dtype + convergence."""
 
+import pytest
 import subprocess
 import sys
+
+# slow lane: jax/pallas compile-heavy; skipped by `make test-fast` / CI per-push
+pytestmark = pytest.mark.slow
 import textwrap
 
 CODE = textwrap.dedent("""

@@ -7,6 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# slow lane: jax/pallas compile-heavy; skipped by `make test-fast` / CI per-push
+pytestmark = pytest.mark.slow
+
 from repro.core import make_cluster
 from repro.distrib import (CheckpointManager, HealthMonitor,
                            InsufficientDevicesError, plan_downsize)

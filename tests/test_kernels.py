@@ -3,6 +3,9 @@
 import numpy as np
 import pytest
 
+# slow lane: jax/pallas compile-heavy; skipped by `make test-fast` / CI per-push
+pytestmark = pytest.mark.slow
+
 hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st

@@ -1,8 +1,12 @@
 """Launcher entry points run end-to-end in smoke mode (subprocess: they
 own XLA_FLAGS / argv)."""
 
+import pytest
 import subprocess
 import sys
+
+# slow lane: jax/pallas compile-heavy; skipped by `make test-fast` / CI per-push
+pytestmark = pytest.mark.slow
 
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
 

@@ -2,8 +2,12 @@
 same loss/gradients as the baseline path, only placement/precision of the
 TP epilogue boundary changes (bf16 reduce-scatter, documented)."""
 
+import pytest
 import subprocess
 import sys
+
+# slow lane: jax/pallas compile-heavy; skipped by `make test-fast` / CI per-push
+pytestmark = pytest.mark.slow
 import textwrap
 
 CODE = textwrap.dedent("""

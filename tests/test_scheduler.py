@@ -142,6 +142,93 @@ def test_hedging_fires_on_straggler(flat_ds):
 
 
 # ---------------------------------------------------------------------------
+# EWMA units: both paths observe (stored fragment bytes -> IPC bytes)
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_units_consistent_across_paths(flat_ds):
+    """The storage node runs the same decode code as the client, so the
+    shared selectivity estimator must see the *same units* from both
+    paths: stored fragment bytes in, Arrow-IPC bytes out.  A client-only
+    and a storage-only scheduler therefore learn (near-)identical output
+    ratios over the same fragments."""
+    fs, ds, _ = flat_ds
+    cols = ["trip_id", "fare_amount"]
+    pred = field("fare_amount") > 30.0
+    frags = ds.fragments()[:6]
+
+    osd_sched = ScanScheduler(fs)
+    for f in frags:
+        osd_sched._scan_osd(f, cols, pred, osd_sched.estimate(f))
+    client_sched = ScanScheduler(fs)
+    for f in frags:
+        client_sched._scan_client(f, cols, pred)
+
+    r_osd = osd_sched._out_ratio.value(0.0)
+    r_client = client_sched._out_ratio.value(0.0)
+    assert r_osd > 0 and r_client > 0
+    assert r_osd == pytest.approx(r_client, rel=0.05)
+
+
+def test_ewma_converges_under_mixed_traffic(flat_ds):
+    """Alternating storage- and client-routed scans feed one estimator;
+    it must converge on the true stored->IPC ratio, not oscillate between
+    incompatible unit systems."""
+    fs, ds, _ = flat_ds
+    cols = ["trip_id", "fare_amount"]
+    pred = field("fare_amount") > 30.0
+    sched = ScanScheduler(fs)
+    for i, f in enumerate(ds.fragments()[:10]):
+        if i % 2 == 0:
+            sched._scan_osd(f, cols, pred, sched.estimate(f))
+        else:
+            sched._scan_client(f, cols, pred)
+    # ground truth from one fragment: decoded IPC bytes per stored byte
+    f0 = ds.fragments()[0]
+    tbl, _, ipc = sched._scan_client(f0, cols, pred)
+    truth = len(ipc) / sched._frag_bytes(f0)
+    assert sched._out_ratio.value(0.0) == pytest.approx(truth, rel=0.35)
+
+
+# ---------------------------------------------------------------------------
+# aggregate pushdown through the scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_count_rows_matches_scan(flat_ds):
+    fs, ds, tbl = flat_ds
+    fmt = AdaptiveFormat()
+    pred = field("fare_amount") > 25.0
+    exp = int((tbl.column("fare_amount").values > 25.0).sum())
+    sc = ds.scanner(format=fmt, predicate=pred)
+    assert sc.count_rows() == exp
+    assert sc.count_rows() == len(
+        ds.scanner(format=fmt, predicate=pred).to_table())
+    # the adaptive count ships integers, not materialized fragments
+    assert sc.metrics.tasks
+    assert all(t.wire_bytes < 64 for t in sc.metrics.tasks)
+
+
+def test_adaptive_count_rows_is_cached(flat_ds):
+    fs, ds, tbl = flat_ds
+    fmt = AdaptiveFormat()
+    pred = field("fare_amount") > 25.0
+    first = ds.scanner(format=fmt, predicate=pred)
+    second = ds.scanner(format=fmt, predicate=pred)
+    assert first.count_rows() == second.count_rows()
+    assert sum(1 for t in second.metrics.tasks if t.cached) == \
+        len(second.metrics.tasks)
+    assert all(t.wire_bytes == 0 for t in second.metrics.tasks)
+
+
+def test_adaptive_count_rows_metadata_only_without_predicate(flat_ds):
+    fs, ds, tbl = flat_ds
+    sc = ds.scanner(format=AdaptiveFormat())
+    assert sc.count_rows() == len(tbl)
+    assert not sc.metrics.tasks                 # zero storage calls
+
+
+# ---------------------------------------------------------------------------
 # result cache
 # ---------------------------------------------------------------------------
 

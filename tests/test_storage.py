@@ -1,5 +1,7 @@
 """Storage layer: placement, replication, failover, striping, DOA, layouts."""
 
+import time
+
 import numpy as np
 import pytest
 
@@ -73,6 +75,51 @@ def test_recover_osd_heals():
     assert store.scrub() == []
 
 
+def test_recover_osd_repairs_stale_replica():
+    """An object overwritten while a replica was down leaves that replica
+    holding *stale bytes* (not missing ones) — recovery must detect it by
+    version and re-replicate, and must sync the version counter rather
+    than put-bump it (a bump would spuriously invalidate result caches)."""
+    store = ObjectStore(4, replication=3)
+    store.put("k", b"old")
+    acting = store.acting_set("k")
+    victim = acting[1]
+    store.fail_osd(victim.osd_id)
+    store.put("k", b"new-bytes")               # peers move to version 2
+    peer_version = store.version_of("k")
+    healed = store.recover_osd(victim.osd_id)
+    assert healed >= 1
+    assert victim.peek("k") == b"new-bytes"    # stale copy re-replicated
+    assert victim.version("k") == peer_version  # synced, not bumped
+    assert store.version_of("k") == peer_version  # cache keys undisturbed
+    assert store.scrub() == []
+
+
+def test_recover_osd_drops_deleted_objects():
+    """An object deleted cluster-wide while a replica was down must be
+    removed on recovery, not resurrected."""
+    store = ObjectStore(4, replication=3)
+    store.put("gone", b"bytes")
+    victim = store.acting_set("gone")[1]
+    store.fail_osd(victim.osd_id)
+    store.delete("gone")
+    store.recover_osd(victim.osd_id)
+    assert not victim.contains("gone")
+    assert not store.exists("gone")
+
+
+def test_scrub_leaves_client_counters_untouched():
+    """Replica verification is background traffic: it must not inflate the
+    reads/bytes_read stats the Fig.-6 accounting replays as client load."""
+    store = ObjectStore(4, replication=3)
+    for i in range(20):
+        store.put(f"o{i}", b"x" * 100)
+    before = [(o.stats.reads, o.stats.bytes_read) for o in store.osds]
+    assert store.scrub() == []
+    after = [(o.stats.reads, o.stats.bytes_read) for o in store.osds]
+    assert before == after
+
+
 def test_scrub_detects_corruption():
     store = ObjectStore(4, replication=3)
     store.put("x", b"good")
@@ -130,6 +177,47 @@ def test_hedged_call_accounts_both(fs):
         hedge_threshold_s=1e-5)
     assert hedged
     assert osd_id != primary.osd_id            # replica won
+    assert Table.from_ipc(res).num_rows == 100
+    # the losing primary keeps running; once it lands, its duplicated
+    # service time is booked as hedge waste
+    deadline = time.perf_counter() + 2.0
+    while (primary.stats.hedge_wasted_s == 0
+           and time.perf_counter() < deadline):
+        time.sleep(0.01)
+    assert primary.stats.hedge_wasted_s > 0
+
+
+def test_hedged_wall_time_overlaps_straggler(fs):
+    """The race property itself: wall time of a hedged call against a
+    straggler is ~(deadline + backup), strictly less than the straggler's
+    own *real* service time — never primary + backup as the old
+    sequential implementation cost."""
+    tbl = Table.from_pydict({"x": np.arange(20_000, dtype=np.int64)})
+    layouts.write_flat(fs, "/w.arw", tbl)
+    doa = DirectObjectAccess(fs)
+    name = fs.object_names("/w.arw")[0]
+    primary = fs.store.primary_of(name)
+    primary.straggle_factor = 1e6
+    primary.max_straggle_delay_s = 0.5         # straggler really sleeps this
+    t0 = time.perf_counter()
+    res, osd_id, el, hedged = doa.call_hedged(
+        "/w.arw", 0, "scan_op", {"columns": ["x"]},
+        hedge_threshold_s=0.02)
+    wall = time.perf_counter() - t0
+    assert hedged and osd_id != primary.osd_id
+    # generous margin for a loaded CI host: still far below the 0.5 s the
+    # primary is provably sleeping (and below primary + backup)
+    assert wall < 0.4
+    assert Table.from_ipc(res).num_rows == 20_000
+
+
+def test_hedged_call_fast_primary_never_hedges(fs):
+    tbl = Table.from_pydict({"x": np.arange(100, dtype=np.int64)})
+    layouts.write_flat(fs, "/f.arw", tbl)
+    doa = DirectObjectAccess(fs)
+    res, osd_id, el, hedged = doa.call_hedged(
+        "/f.arw", 0, "scan_op", {"columns": ["x"]}, hedge_threshold_s=5.0)
+    assert not hedged
     assert Table.from_ipc(res).num_rows == 100
 
 
