@@ -3,8 +3,8 @@
 PYTHON ?= python
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-fast bench bench-adaptive bench-fig5 bench-fig6 \
-	bench-hedged deps
+.PHONY: test test-fast lint bench bench-adaptive bench-aggregate \
+	bench-fig5 bench-fig6 bench-hedged bench-smoke deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -15,10 +15,24 @@ test:
 test-fast:
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
+# ruff config lives in ruff.toml (correctness rules everywhere; the
+# format gate ratchets over files added after the lint lane landed)
+lint:
+	ruff check src tests benchmarks
+	ruff format --check src tests benchmarks
+
 deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
 
-bench: bench-fig5 bench-fig6 bench-adaptive bench-hedged
+# CI per-push benchmark lane: small configs, BENCH_*.json artifacts,
+# wall-time regression gate vs benchmarks/bench_baseline.json
+bench-smoke:
+	$(PYTHON) benchmarks/bench_smoke.py
+
+bench: bench-fig5 bench-fig6 bench-adaptive bench-hedged bench-aggregate
+
+bench-aggregate:
+	$(PYTHON) benchmarks/aggregate_pushdown.py
 
 bench-hedged:
 	$(PYTHON) benchmarks/hedged_straggler.py

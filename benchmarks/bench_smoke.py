@@ -1,0 +1,85 @@
+"""CI bench-smoke driver: run the per-push benchmark lane, emit BENCH_*.json.
+
+Runs ``hedged_straggler`` at its full (still CI-sized) configuration, a
+small-config ``adaptive_scan`` sweep, and a small ``aggregate_pushdown``
+grid; each result lands in ``results/bench/BENCH_<name>.json`` with a
+top-level ``wall_s`` the regression gate (``check_regression.py``)
+compares against the checked-in ``benchmarks/bench_baseline.json``.
+
+Claims inside each benchmark are recorded in the JSON (and surfaced in
+the job log) but only the wall-time gate fails the lane: CI machines are
+noisy, and the correctness claims are pinned by the test suite instead.
+
+    PYTHONPATH=src:. python benchmarks/bench_smoke.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import RESULTS_DIR
+
+
+def _emit(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"bench-smoke: wrote {path} (wall {payload['wall_s']:.3f}s)")
+
+
+def run_hedged_straggler() -> dict:
+    from benchmarks import hedged_straggler
+    t0 = time.perf_counter()
+    out = hedged_straggler.run()
+    out["wall_s"] = time.perf_counter() - t0
+    out["claims"] = hedged_straggler.check_claims(out)
+    return out
+
+
+def run_adaptive_scan_small() -> dict:
+    from benchmarks import adaptive_scan
+    # small config: same shape, a third of the rows, half the sweep —
+    # enough to exercise every code path per push; the full sweep stays a
+    # manual / nightly benchmark
+    adaptive_scan.ROWS = 60_000
+    adaptive_scan.CLIENTS = (1, 4, 32)
+    t0 = time.perf_counter()
+    out = adaptive_scan.run()
+    out["wall_s"] = time.perf_counter() - t0
+    out["claims"] = adaptive_scan.check_claims(out)
+    out["small_config"] = True
+    return out
+
+
+def run_aggregate_pushdown_small() -> dict:
+    from benchmarks import aggregate_pushdown
+    aggregate_pushdown.ROWS = 60_000
+    t0 = time.perf_counter()
+    out = aggregate_pushdown.run()
+    out["wall_s"] = time.perf_counter() - t0
+    out["claims"] = aggregate_pushdown.check_claims(out)
+    out["small_config"] = True
+    return out
+
+
+BENCHES = {
+    "hedged_straggler": run_hedged_straggler,
+    "adaptive_scan": run_adaptive_scan_small,
+    "aggregate_pushdown": run_aggregate_pushdown_small,
+}
+
+
+def main():
+    for name, fn in BENCHES.items():
+        print(f"== bench-smoke: {name}")
+        out = fn()
+        _emit(name, out)
+        for line in out.get("claims", []):
+            print(f"  {line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Bench-smoke regression gate: fail CI on >25% wall-time regression.
+
+Compares each ``results/bench/BENCH_<name>.json`` produced by
+``bench_smoke.py`` against the checked-in ``benchmarks/bench_baseline.json``
+and exits non-zero if any benchmark's ``wall_s`` regressed past the
+tolerance (default 1.25x, override with BENCH_TOLERANCE).  A benchmark
+with no baseline entry is reported but does not fail the gate — add its
+measured wall to the baseline in the same PR that introduces it.
+
+The committed baseline is a *budget*, not last run's measurement: CI
+runners and dev machines differ, so the checked-in walls carry ~3x
+headroom over a quiet reference run.  The gate therefore catches
+algorithmic blowups (a scan going quadratic), not single-digit-percent
+drift; tighten the budget with ``--update`` once runs on the actual CI
+hardware establish its noise floor.
+
+Refreshing the baseline after an intentional change:
+
+    PYTHONPATH=src:. python benchmarks/bench_smoke.py
+    python benchmarks/check_regression.py --update
+
+    python benchmarks/check_regression.py
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BASELINE = os.path.join(HERE, "bench_baseline.json")
+RESULTS = os.path.join(HERE, "..", "results", "bench")
+TOLERANCE = float(os.environ.get("BENCH_TOLERANCE", 1.25))
+
+
+def load_results() -> dict[str, float]:
+    walls = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        with open(path) as f:
+            walls[name] = float(json.load(f)["wall_s"])
+    return walls
+
+
+def main(argv: list[str]) -> int:
+    walls = load_results()
+    if not walls:
+        print("check_regression: no BENCH_*.json under results/bench/ — "
+              "run benchmarks/bench_smoke.py first")
+        return 2
+
+    if "--update" in argv:
+        with open(BASELINE, "w") as f:
+            json.dump({n: {"wall_s": round(w, 3)}
+                       for n, w in sorted(walls.items())}, f, indent=1)
+        print(f"check_regression: baseline updated -> {BASELINE}")
+        return 0
+
+    try:
+        with open(BASELINE) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"check_regression: no baseline at {BASELINE}; run with "
+              "--update to create one")
+        return 2
+
+    failed = []
+    print(f"check_regression: tolerance {TOLERANCE:.2f}x")
+    print(f"{'benchmark':24} {'baseline':>10} {'now':>10} {'ratio':>7}")
+    for name, wall in sorted(walls.items()):
+        base = baseline.get(name, {}).get("wall_s")
+        if base is None:
+            print(f"{name:24} {'(none)':>10} {wall:>9.3f}s      — "
+                  "no baseline entry; add one with --update")
+            continue
+        ratio = wall / max(base, 1e-9)
+        flag = "FAIL" if ratio > TOLERANCE else "ok"
+        print(f"{name:24} {base:>9.3f}s {wall:>9.3f}s {ratio:>6.2f}x "
+              f"{flag}")
+        if ratio > TOLERANCE:
+            failed.append(name)
+    if failed:
+        print(f"check_regression: wall-time regression in "
+              f"{', '.join(failed)} (>{TOLERANCE:.2f}x baseline)")
+        return 1
+    print("check_regression: all benchmarks within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

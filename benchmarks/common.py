@@ -21,7 +21,6 @@ import numpy as np
 from repro.aformat.expressions import field
 from repro.aformat.table import Table
 from repro.core import make_cluster, write_flat
-from repro.dataset import dataset
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "bench")

@@ -11,8 +11,7 @@ same quantity their bar chart shows, normalized to the query duration.
 
 from __future__ import annotations
 
-from benchmarks.common import (build_cluster, save_result,
-                               selectivity_predicate, taxi_like_table)
+from benchmarks.common import build_cluster, save_result, taxi_like_table
 from repro.dataset import dataset
 from repro.storage.perfmodel import (ClusterSpec, rebalance_nodes,
                                      simulate_scan)

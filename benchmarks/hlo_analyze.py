@@ -36,7 +36,6 @@ def main():
 
     # re-lower to get text (lower_cell drops it); cheap relative to compile
     import jax
-    cfg_text = None
     # reuse the parsing on compiled text by recompiling through lower_cell's
     # internals would double work; instead re-run with text capture:
     from repro.launch.dryrun import _mesh_for  # noqa

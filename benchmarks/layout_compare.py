@@ -9,11 +9,8 @@ same scan_op, so query results and scan costs must match).
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import save_result, selectivity_predicate, \
     taxi_like_table
-from repro.aformat.expressions import field
 from repro.core import (dataset, make_cluster, write_flat, write_split,
                         write_striped)
 from repro.storage.perfmodel import ClusterSpec, rebalance_nodes, \

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import struct
-from typing import Any, Sequence
+from typing import Sequence
 
 import numpy as np
 
@@ -242,7 +242,6 @@ def scan_row_group(src: RandomAccessSource, meta: FileMeta, rg: RowGroupMeta,
     if predicate is not None:
         needed |= predicate.columns()
     cols = {n: read_column(src, meta, rg, n) for n in needed}
-    sch = meta.schema.select(list(names))
     tbl_all = Table(meta.schema.select(sorted(needed, key=meta.schema.index)),
                     [cols[n] for n in sorted(needed, key=meta.schema.index)])
     if predicate is not None:

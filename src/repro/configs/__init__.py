@@ -15,6 +15,9 @@ from repro.configs.llama4_maverick import CONFIG as llama4_maverick
 from repro.configs.whisper_small import CONFIG as whisper_small
 from repro.configs.zamba2_1p2b import CONFIG as zamba2_1p2b
 
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+           "ARCHS", "get_config", "smoke_config"]
+
 ARCHS: dict[str, ModelConfig] = {
     c.name: c
     for c in [

@@ -21,7 +21,7 @@ and benchmarks.
 
 from __future__ import annotations
 
-from repro.dataset import (AdaptiveFormat, Dataset, ParquetFormat,
+from repro.dataset import (AdaptiveFormat, AggSpec, Dataset, ParquetFormat,
                            PushdownParquetFormat, ScanScheduler, Scanner,
                            dataset)
 from repro.storage.cephfs import CephFS, DirectObjectAccess
@@ -39,7 +39,7 @@ def make_cluster(num_osds: int = 8, *, replication: int = 3,
     return CephFS(store)
 
 
-__all__ = ["Dataset", "ParquetFormat", "PushdownParquetFormat",
+__all__ = ["AggSpec", "Dataset", "ParquetFormat", "PushdownParquetFormat",
            "AdaptiveFormat", "ScanScheduler", "Scanner", "dataset",
            "CephFS", "DirectObjectAccess", "write_flat", "write_split",
            "write_striped", "register_default_classes", "ObjectStore",

@@ -1,3 +1,4 @@
+from repro.aformat.aggregate import AggSpec
 from repro.dataset.admission import AdmissionController
 from repro.dataset.dataset import Dataset, ScanMetrics, Scanner, dataset
 from repro.dataset.format import (AdaptiveFormat, FileFormat, ParquetFormat,
@@ -6,7 +7,7 @@ from repro.dataset.fragment import Fragment
 from repro.dataset.scheduler import (ResultCache, ScanScheduler,
                                      modeled_latency)
 
-__all__ = ["AdmissionController", "Dataset", "ScanMetrics", "Scanner",
-           "dataset", "FileFormat", "ParquetFormat",
+__all__ = ["AdmissionController", "AggSpec", "Dataset", "ScanMetrics",
+           "Scanner", "dataset", "FileFormat", "ParquetFormat",
            "PushdownParquetFormat", "AdaptiveFormat", "TaskRecord",
            "Fragment", "ResultCache", "ScanScheduler", "modeled_latency"]

@@ -28,6 +28,8 @@ from typing import Iterator, Sequence
 import numpy as np
 
 from repro.aformat import parquet
+from repro.aformat.aggregate import (AggState, DEFAULT_MAX_GROUPS,
+                                     parse_aggs, partial_from_stats)
 from repro.aformat.expressions import ALL, NONE, Expr
 from repro.aformat.schema import Schema
 from repro.aformat.table import Column, Table
@@ -264,6 +266,16 @@ class Scanner:
         return out
 
     # -- execution ---------------------------------------------------------------
+    def _fan_out(self, items, run) -> list:
+        """Run ``run`` over ``items`` on up to ``num_threads`` workers
+        (serially when that buys nothing); results in input order.  The
+        shared dispatch for every per-fragment aggregate/count fan-out —
+        the streaming scan path has its own backpressured engine."""
+        if len(items) <= 1 or self.num_threads <= 1:
+            return [run(x) for x in items]
+        with ThreadPoolExecutor(max_workers=self.num_threads) as pool:
+            return list(pool.map(run, items))
+
     def _admission(self) -> AdmissionController:
         """One admission controller per scan: every placement (client
         byte-pulls, pushdown cls calls, adaptive either-way) draws from
@@ -353,6 +365,66 @@ class Scanner:
         self.metrics.rows = len(result)
         return result
 
+    def aggregate(self, aggs, *, group_by: str | None = None,
+                  max_groups: int = DEFAULT_MAX_GROUPS) -> Table:
+        """SUM/MIN/MAX/MEAN/COUNT — optionally GROUP BY one key column —
+        with storage-side partial aggregation.
+
+        ``aggs`` is a list of :class:`~repro.aformat.aggregate.AggSpec`,
+        ``(op, column)`` tuples, or ``"op(column)"`` strings ("count"
+        alone is COUNT(*)).  Per fragment: stats prove NONE -> pruned;
+        ungrouped, predicate-free count/min/max -> answered from footer
+        metadata with zero I/O; everything else fans out over
+        ``num_threads`` (admission-bounded per OSD) through the format's
+        ``aggregate_fragment`` placement — ``agg_op`` partial states on
+        the wire for pushdown, placement-priced / hedged / result-cached
+        through the scheduler for ``format="adaptive"``, a
+        projected-column scan folded locally for the client format.
+        Partial states merge in completion order; the merged state is
+        finalized into a result Table (one row ungrouped, one row per
+        key, sorted, grouped).  ``max_groups`` bounds storage-side group
+        cardinality — past it a fragment spills to a scan."""
+        specs = parse_aggs(aggs)
+        for s in specs:                 # validate early, not per-fragment
+            if s.column is not None:
+                self.ds.schema.field(s.column)
+        if group_by is not None:
+            self.ds.schema.field(group_by)
+        state = AggState.empty(specs, group_by)
+        admission = self._admission()
+        lock = threading.Lock()
+        remote: list[tuple[Fragment, Expr | None]] = []
+        t0 = time.perf_counter()
+        for frag, pred in self.plan():
+            if pred is None and group_by is None and frag.stats:
+                part = partial_from_stats(specs, frag.stats,
+                                          frag.num_rows, self.ds.schema)
+                if part is not None:    # metadata-only: zero I/O
+                    state.merge(part)
+                    self.metrics.tasks.append(TaskRecord(
+                        "client", -1, 0.0, 0, 0.0, frag.num_rows,
+                        cached=True))
+                    continue
+            remote.append((frag, pred))
+
+        def run(item):
+            frag, pred = item
+            part, rec = self.fmt.aggregate_fragment(
+                self.ds.fs, frag, specs, group_by, pred,
+                schema=self.ds.schema, max_groups=max_groups,
+                admission=admission)
+            with lock:                  # merge in completion order
+                state.merge(part)
+                self.metrics.tasks.append(rec)
+
+        try:
+            self._fan_out(remote, run)
+        finally:
+            self.metrics.rows = state.rows
+            self.metrics.wall_s = time.perf_counter() - t0
+            self.metrics.admission = admission.stats()
+        return state.finalize(self.ds.schema)
+
     def count_rows(self) -> int:
         """COUNT(*) with aggregate pushdown (the S3-Select-style extension
         of the paper's scan_op).
@@ -360,7 +432,8 @@ class Scanner:
         Per fragment: stats prove ALL -> count from metadata with zero
         I/O; stats prove NONE -> pruned; otherwise only an integer
         crosses the wire — via ``rowcount_op`` on the storage node for
-        the static pushdown format, or via the adaptive scheduler
+        the static pushdown format (fanned out over ``num_threads``,
+        admission-bounded like any scan), or via the adaptive scheduler
         (placement-priced, hedged, result-cached) for
         ``format="adaptive"``.  Only the client-side format falls back to
         a materializing scan."""
@@ -376,6 +449,8 @@ class Scanner:
         self.metrics.fragments_total = len(self.ds._fragments)
         doa = DirectObjectAccess(self.ds.fs)
         admission = self._admission()
+        lock = threading.Lock()
+        remote: list[Fragment] = []
         for frag in self.ds._fragments:
             pred = self.predicate
             if pred is None:
@@ -389,8 +464,11 @@ class Scanner:
                 if verdict == ALL:
                     total += frag.num_rows      # metadata-only count
                     continue
+            remote.append(frag)
+
+        def run(frag: Fragment) -> int:
             payload: dict = {
-                "predicate": pred.to_json() if pred is not None else None,
+                "predicate": self.predicate.to_json(),
                 "row_groups": [frag.rg_in_object],
             }
             if frag.footer is not None:
@@ -400,9 +478,12 @@ class Scanner:
                 out, osd_id, el = doa.call(frag.path, frag.obj_idx,
                                            "rowcount_op", payload)
             n = json.loads(out)["rows"]
-            self.metrics.tasks.append(TaskRecord(
-                "osd", osd_id, el, len(out), 0.0, n))
-            total += n
+            with lock:
+                self.metrics.tasks.append(TaskRecord(
+                    "osd", osd_id, el, len(out), 0.0, n))
+            return n
+
+        total += sum(self._fan_out(remote, run))
         self.metrics.rows = total
         self.metrics.admission = admission.stats()
         return total
@@ -430,11 +511,7 @@ class Scanner:
                 self.metrics.tasks.append(rec)
             return n
 
-        if len(remote) <= 1 or self.num_threads <= 1:
-            total += sum(run(x) for x in remote)
-        else:
-            with ThreadPoolExecutor(max_workers=self.num_threads) as pool:
-                total += sum(pool.map(run, remote))
+        total += sum(self._fan_out(remote, run))
         self.metrics.rows = total
         self.metrics.admission = admission.stats()
         return total

@@ -18,11 +18,14 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import json
 import threading
 import time
 from typing import Any, Sequence
 
 from repro.aformat import parquet
+from repro.aformat.aggregate import (AggSpec, AggState, DEFAULT_MAX_GROUPS,
+                                     needed_columns, partial_aggregate)
 from repro.aformat.expressions import Expr
 from repro.aformat.table import Table
 from repro.dataset.fragment import Fragment
@@ -58,6 +61,41 @@ class FileFormat:
                       predicate: Expr | None,
                       admission=None) -> tuple[Table, TaskRecord]:
         raise NotImplementedError
+
+    def aggregate_fragment(self, fs: CephFS, frag: Fragment,
+                           specs: Sequence[AggSpec], group_by: str | None,
+                           predicate: Expr | None, *, schema,
+                           max_groups: int = DEFAULT_MAX_GROUPS,
+                           admission=None) -> tuple[AggState, TaskRecord]:
+        """Partial-aggregate one fragment; returns (AggState, TaskRecord).
+        ``schema`` is the dataset schema (split-layout fragments carry no
+        client-side footer of their own).  The default is the client-side
+        path — scan the needed columns, fold locally — so every format
+        answers ``Scanner.aggregate``."""
+        return aggregate_client(self, fs, frag, specs, group_by,
+                                predicate, schema=schema,
+                                admission=admission)
+
+
+def aggregate_client(fmt: FileFormat, fs: CephFS, frag: Fragment,
+                     specs, group_by, predicate, *, schema,
+                     admission=None) -> "tuple[AggState, TaskRecord]":
+    """Client-side aggregation over any format's scan path: pull only the
+    referenced columns through ``scan_fragment`` and fold them locally
+    (no cardinality bound — the client owns its memory)."""
+    cols = needed_columns(specs, group_by, schema, predicate)
+    tbl, rec = fmt.scan_fragment(fs, frag, cols, predicate,
+                                 admission=admission)
+    t0 = time.perf_counter()
+    state = partial_aggregate(tbl, specs, group_by)
+    fold = time.perf_counter() - t0
+    # the fold burns client CPU; it counts toward cpu_s only when the
+    # record's `where` IS the client (a pushdown spill keeps its cpu_s as
+    # the OSD's decode time)
+    rec = dataclasses.replace(
+        rec, cpu_s=rec.cpu_s + (fold if rec.where == "client" else 0.0),
+        client_cpu_s=rec.client_cpu_s + fold, rows_out=state.rows)
+    return state, rec
 
 
 def _admit_fragment(fs: CephFS, frag: Fragment, admission):
@@ -109,6 +147,33 @@ def scan_payload(frag: Fragment, columns, predicate) -> dict[str, Any]:
     return payload
 
 
+def agg_payload(frag: Fragment, specs: Sequence[AggSpec],
+                group_by: str | None, predicate: Expr | None,
+                max_groups: int) -> dict[str, Any]:
+    """The ``agg_op`` request for one fragment — shared by the static
+    pushdown format and the adaptive scheduler (same wire-contract rule
+    as :func:`scan_payload`)."""
+    payload: dict[str, Any] = {
+        "aggs": [s.to_json() for s in specs],
+        "group_by": group_by,
+        "predicate": predicate.to_json() if predicate is not None else None,
+        "row_groups": [frag.rg_in_object],
+        "max_groups": max_groups,
+    }
+    if frag.footer is not None:
+        payload["footer"] = frag.footer.serialize()
+    return payload
+
+
+def parse_agg_reply(raw: bytes) -> "AggState | None":
+    """Decode an ``agg_op`` reply; None means the storage node spilled
+    (group cardinality over the bound) and the caller must fall back to a
+    scan."""
+    if json.loads(raw).get("spill"):
+        return None
+    return AggState.deserialize(raw)
+
+
 class PushdownParquetFormat(FileFormat):
     """Storage-side scan (the paper's RADOS Parquet): invoke ``scan_op`` on
     the object through DirectObjectAccess; the node decodes/filters and
@@ -137,6 +202,39 @@ class PushdownParquetFormat(FileFormat):
         rec = TaskRecord("osd", osd_id, el, len(result), client_cpu,
                          len(tbl), hedged=hedged)
         return tbl, rec
+
+    def aggregate_fragment(self, fs, frag, specs, group_by, predicate, *,
+                           schema, max_groups=DEFAULT_MAX_GROUPS,
+                           admission=None):
+        """``agg_op`` on the storage node: only the serialized partial
+        state crosses the wire.  A SPILL reply (cardinality over
+        ``max_groups``) falls back to the storage-side *scan* — filtered
+        columns ship, the client folds them (spill-to-scan)."""
+        doa = DirectObjectAccess(fs)
+        payload = agg_payload(frag, specs, group_by, predicate, max_groups)
+        with _admit_fragment(fs, frag, admission):
+            if self.hedge_threshold_s is not None:
+                raw, osd_id, el, hedged = doa.call_hedged(
+                    frag.path, frag.obj_idx, "agg_op", payload,
+                    hedge_threshold_s=self.hedge_threshold_s)
+            else:
+                raw, osd_id, el = doa.call(frag.path, frag.obj_idx,
+                                           "agg_op", payload)
+                hedged = False
+        t0 = time.perf_counter()
+        state = parse_agg_reply(raw)
+        if state is None:
+            state, rec = aggregate_client(self, fs, frag, specs, group_by,
+                                          predicate, schema=schema,
+                                          admission=admission)
+            # the refused agg_op reply still crossed the wire
+            rec = dataclasses.replace(
+                rec, wire_bytes=rec.wire_bytes + len(raw), hedged=hedged)
+            return state, rec
+        client_cpu = time.perf_counter() - t0
+        rec = TaskRecord("osd", osd_id, el, len(raw), client_cpu,
+                         state.rows, hedged=hedged)
+        return state, rec
 
 
 class AdaptiveFormat(FileFormat):
@@ -174,6 +272,13 @@ class AdaptiveFormat(FileFormat):
         return self.scheduler_for(fs).scan_fragment(frag, columns,
                                                     predicate,
                                                     admission=admission)
+
+    def aggregate_fragment(self, fs, frag, specs, group_by, predicate, *,
+                           schema, max_groups=DEFAULT_MAX_GROUPS,
+                           admission=None):
+        return self.scheduler_for(fs).aggregate_fragment(
+            frag, specs, group_by, predicate, schema=schema,
+            max_groups=max_groups, admission=admission)
 
     def stats(self) -> dict:
         """Decision/hedge/cache counters, summed across every cluster

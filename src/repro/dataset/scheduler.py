@@ -67,9 +67,12 @@ import time
 from collections import OrderedDict, deque
 from typing import Sequence
 
+from repro.aformat.aggregate import (AggState, DEFAULT_MAX_GROUPS,
+                                     needed_columns, partial_aggregate)
 from repro.aformat.expressions import Expr
 from repro.aformat.table import Table
-from repro.dataset.format import ParquetFormat, TaskRecord, scan_payload
+from repro.dataset.format import (ParquetFormat, TaskRecord, agg_payload,
+                                  parse_agg_reply, scan_payload)
 from repro.dataset.fragment import Fragment
 from repro.storage.cephfs import CephFS, DirectObjectAccess
 from repro.storage.objstore import ObjectNotFound, OSDDownError
@@ -204,6 +207,7 @@ class ScanScheduler:
         self.decisions = {"osd": 0, "client": 0, "cache": 0}
         self.hedges = 0
         self.fallbacks = 0
+        self.spills = 0         # agg_op group-cardinality spill-to-scan
 
     # -- signals & estimates ---------------------------------------------------
     def _object_name(self, frag: Fragment) -> str:
@@ -448,6 +452,106 @@ class ScanScheduler:
                          hedged=hedged)
         return n, rec, raw
 
+    def aggregate_fragment(self, frag: Fragment, specs, group_by,
+                           predicate, *, schema,
+                           max_groups: int = DEFAULT_MAX_GROUPS,
+                           admission=None) -> "tuple[AggState, TaskRecord]":
+        """Partial aggregation with the full placement machinery: priced
+        with the aggregate's few-byte result size (so pushdown wins
+        unless storage is badly saturated), hedged past the straggler
+        deadline, and result-cached under the version-keyed LRU keyed by
+        the aggregate spec.  Returns (AggState, TaskRecord)."""
+        spec_key = ("__agg__",
+                    json.dumps([s.to_json() for s in specs]
+                               + [group_by, max_groups], sort_keys=True))
+        key = self.cache_key(frag, spec_key, predicate)
+        cached = self.cache.get(key)
+        if cached is not None:
+            state = AggState.deserialize(cached)
+            with self._lock:
+                self.decisions["cache"] += 1
+            return state, TaskRecord("client", -1, 0.0, 0, 0.0,
+                                     state.rows, cached=True)
+
+        # an aggregate's reply is a partial state — never the decoded
+        # columns: ~64B of JSON envelope plus ~48B per group, with the
+        # group count capped by the cardinality bound (assume a few dozen
+        # when the true cardinality is unknown)
+        groups_est = min(max_groups, 64) if group_by else 0
+        est = self.estimate(frag, out_bytes=64 + 48 * groups_est)
+        with self._admit(frag, admission):
+            if est.where == "osd":
+                try:
+                    state, rec = self._agg_osd(frag, specs, group_by,
+                                               predicate, est, schema,
+                                               max_groups)
+                except (OSDDownError, ObjectNotFound):
+                    with self._lock:
+                        self.fallbacks += 1
+                    state, rec = self._agg_client(frag, specs, group_by,
+                                                  predicate, schema)
+            else:
+                state, rec = self._agg_client(frag, specs, group_by,
+                                              predicate, schema)
+        self.cache.put(key, state.serialize())
+        return state, rec
+
+    def _agg_osd(self, frag, specs, group_by, predicate, est, schema,
+                 max_groups):
+        payload = agg_payload(frag, specs, group_by, predicate, max_groups)
+        deadline = self._hedge_deadline(est.in_bytes)
+        if deadline is None:
+            raw, osd_id, el = self.doa.call(frag.path, frag.obj_idx,
+                                            "agg_op", payload)
+            hedged = False
+        else:
+            raw, osd_id, el, hedged = self.doa.call_hedged(
+                frag.path, frag.obj_idx, "agg_op", payload,
+                hedge_threshold_s=deadline)
+        state = parse_agg_reply(raw)
+        with self._lock:
+            if hedged:
+                self.hedges += 1
+            if state is not None:
+                self.decisions["osd"] += 1
+        if state is None:
+            # cardinality spill -> the storage-side *scan*: scan_op still
+            # filters and projects on the OSD (only the needed columns'
+            # matching rows ship) and the client folds them unbounded.
+            # _scan_osd books the placement decision; the refused agg_op
+            # reply bytes still crossed the wire (its decode time lands
+            # in the node's busy_s like any other cls call).
+            with self._lock:
+                self.spills += 1
+            cols = needed_columns(specs, group_by, schema, predicate)
+            tbl, rec, _ = self._scan_osd(frag, cols, predicate, est)
+            t0 = time.perf_counter()
+            state = partial_aggregate(tbl, specs, group_by)
+            fold = time.perf_counter() - t0
+            rec = dataclasses.replace(
+                rec, wire_bytes=rec.wire_bytes + len(raw),
+                client_cpu_s=rec.client_cpu_s + fold,
+                rows_out=state.rows, hedged=rec.hedged or hedged)
+            return state, rec
+        # like counts, aggregates decode a column subset: not a full-scan
+        # observation, so the hedge history / decode-rate EWMAs stay put
+        rec = TaskRecord("osd", osd_id, el, len(raw), 0.0, state.rows,
+                         hedged=hedged)
+        return state, rec
+
+    def _agg_client(self, frag, specs, group_by, predicate, schema):
+        cols = needed_columns(specs, group_by, schema, predicate)
+        tbl, rec = self._client_fmt.scan_fragment(self.fs, frag, cols,
+                                                  predicate)
+        t0 = time.perf_counter()
+        state = partial_aggregate(tbl, specs, group_by)
+        fold = time.perf_counter() - t0
+        with self._lock:
+            self.decisions["client"] += 1
+        return state, TaskRecord("client", -1, rec.cpu_s + fold,
+                                 rec.wire_bytes,
+                                 rec.client_cpu_s + fold, state.rows)
+
     def _count_client(self, frag, predicate):
         """Fallback count: client-side decode of just the (first)
         predicate column (``count_fragment`` answered the predicate-less
@@ -465,4 +569,5 @@ class ScanScheduler:
     # -- reporting ---------------------------------------------------------------
     def stats(self) -> dict:
         return {"decisions": dict(self.decisions), "hedges": self.hedges,
-                "fallbacks": self.fallbacks, "cache": self.cache.stats()}
+                "fallbacks": self.fallbacks, "spills": self.spills,
+                "cache": self.cache.stats()}

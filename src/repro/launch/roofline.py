@@ -366,7 +366,6 @@ def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
     dom = max(("compute_s", "memory_s", "collective_s"),
               key=lambda k: terms[k])
     terms["bottleneck"] = dom
-    total = max(compute_s, 1e-30)
     terms["roofline_fraction"] = compute_s / max(
         compute_s, memory_s, collective_s)
     terms["step_time_lower_bound_s"] = max(compute_s, memory_s, collective_s)

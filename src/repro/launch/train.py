@@ -19,8 +19,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.aformat.expressions import field
 from repro.configs import SHAPES, get_config, smoke_config

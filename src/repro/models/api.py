@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import scanner
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
@@ -278,7 +277,6 @@ def decode_step(cfg, ctx, params, cache, tokens, pos):
     """tokens (B, 1) int32; pos scalar int32 (uniform batch position)."""
     dtype = jnp.dtype(cfg.compute_dtype)
     p = lm._cast(params, dtype)
-    b = tokens.shape[0]
     x = _embed(cfg, p, tokens[:, 0], dtype)[:, None, :]
     fam = cfg.family
     win = cfg.sliding_window

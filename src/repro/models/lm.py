@@ -20,7 +20,6 @@ Modes:
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -31,10 +30,9 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models import ssd
-from repro.models.common import (Initializer, apply_rope, cross_entropy,
-                                 gelu, rms_norm, rope_at, rope_table,
-                                 split_tree, swiglu)
-from repro.sharding import ShardingCtx, shard_map
+from repro.models.common import (Initializer, apply_rope, gelu,
+                                 rms_norm, rope_at, split_tree, swiglu)
+from repro.sharding import shard_map
 
 # ---------------------------------------------------------------------------
 # Parameter construction
@@ -545,7 +543,6 @@ def moe_block(cfg, ctx, p, x):
         return y
 
     def ep_body(h, router, wi, wg, wo):
-        nm = mesh.shape["model"]
         t = h.shape[0] * h.shape[1]
         hf = h.reshape(t, d)
         xe, meta, cap = _moe_local(cfg, {"router": router}, hf)  # (E,cap,d)

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +42,22 @@ class Completion:
     prefill_s: float
     decode_s: float
     steps: int
+
+
+def prompt_lengths(ds: Dataset, *, format="adaptive",
+                   predicate=None, uid_col: str = "uid",
+                   pos_col: str = "pos", num_threads: int = 8):
+    """Per-uid prompt lengths via grouped COUNT pushdown — the wave
+    planner's sizing query.  Where ``ingest_prompts`` must ship token
+    columns, this ships only per-uid partial counts (``agg_op``), so an
+    admission planner can size batches / padding before paying for a
+    single token byte.  Returns ({uid: n_tokens}, ScanMetrics)."""
+    sc = ds.scanner(format=format, predicate=predicate,
+                    num_threads=num_threads)
+    out = sc.aggregate([("count", pos_col)], group_by=uid_col)
+    uids = out.column(uid_col).values
+    counts = out.column(f"count_{pos_col}").values
+    return {int(u): int(n) for u, n in zip(uids, counts)}, sc.metrics
 
 
 def ingest_prompts(ds: Dataset, *, format="adaptive",

@@ -60,7 +60,6 @@ class CephFS:
         return self._mds[path]
 
     def unlink(self, path: str):
-        ino = self.stat(path)
         for name in self.object_names(path):
             self.store.delete(name)
         del self._mds[path]

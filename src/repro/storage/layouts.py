@@ -74,7 +74,6 @@ def read_striped_footer(fs: CephFS, path: str) -> parquet.FileMeta:
     """Read the footer from the *last object(s)* only, via striping
     metadata — no full-file read (paper: 'the last object ... is read')."""
     ino = fs.stat(path)
-    su = ino.stripe_unit
     last = fs.store.get(fs.object_name(ino, ino.object_count - 1))
     if len(last) < 8:
         prev = fs.store.get(fs.object_name(ino, ino.object_count - 2))
@@ -83,7 +82,6 @@ def read_striped_footer(fs: CephFS, path: str) -> parquet.FileMeta:
         raise ValueError("bad striped footer magic")
     (flen,) = struct.unpack("<I", last[-8:-4])
     if flen + 8 > len(last):   # footer spills across objects
-        need = flen + 8 - len(last)
         start_obj = ino.object_count - 2
         more = fs.store.get(fs.object_name(ino, start_obj))
         last = more + last

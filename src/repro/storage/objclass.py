@@ -21,9 +21,16 @@ import zlib
 from collections import OrderedDict
 
 from repro.aformat import parquet
+from repro.aformat.aggregate import (AggSpec, AggState, CardinalityError,
+                                     needed_columns, partial_aggregate,
+                                     partial_from_stats)
 from repro.aformat.expressions import Expr
 from repro.aformat.table import Table
 from repro.storage.objstore import ObjectStore, ObjectHandle
+
+#: agg_op's reply when the group-by bound is exceeded: the client must
+#: fall back to a scan (spill-to-scan).
+SPILL = json.dumps({"spill": True}).encode()
 
 # -- storage-side footer cache ----------------------------------------------
 # Keyed by (osd_id, object name, object version): a new write produces a new
@@ -96,25 +103,75 @@ def stat_op(obj: ObjectHandle, payload: dict) -> bytes:
     return meta.serialize()
 
 
+def _run_agg(obj: ObjectHandle, meta: parquet.FileMeta,
+             specs: list[AggSpec], group_by: str | None, pred,
+             metas, max_groups: int | None) -> AggState:
+    """The shared storage-side aggregation kernel: per row group, answer
+    from footer stats where provable (ungrouped + no predicate), else
+    decode only the referenced columns, filter, and fold into the partial
+    state.  Raises CardinalityError past ``max_groups``."""
+    state = AggState.empty(specs, group_by)
+    cols = needed_columns(specs, group_by, meta.schema, pred)
+    for rg in metas:
+        part = None
+        if pred is None and group_by is None:
+            part = partial_from_stats(specs,
+                                      rg.column_stats(meta.schema),
+                                      rg.num_rows, meta.schema)
+        if part is None:
+            t = parquet.scan_row_group(obj, meta, rg, cols, pred)
+            part = partial_aggregate(t, specs, group_by,
+                                     max_groups=max_groups)
+        state.merge(part)
+        if max_groups is not None and state.num_groups > max_groups:
+            raise CardinalityError(
+                f"group-by {group_by!r}: object-level cardinality "
+                f"exceeds {max_groups}")
+    return state
+
+
+def agg_op(obj: ObjectHandle, payload: dict) -> bytes:
+    """Partial aggregation on the storage node: decode only the referenced
+    columns, filter, fold into an AggState, ship back the compact
+    serialized partial state (the client merges states across objects).
+
+    payload: {"aggs": [AggSpec json...], "group_by": str|None,
+              "predicate": expr-json|None, "row_groups": [...]|None,
+              "footer": serialized FileMeta|None,
+              "max_groups": int|None (group-cardinality bound)}
+
+    A fragment whose group-by cardinality exceeds ``max_groups`` returns
+    the SPILL marker instead — the client falls back to a scan
+    (spill-to-scan), so a hostile key can never balloon node memory or
+    the wire payload.  ``rowcount_op`` is the degenerate ungrouped
+    COUNT(*) case of this method."""
+    meta = _payload_footer(obj, payload)
+    specs = [AggSpec.from_json(s) for s in payload["aggs"]]
+    group_by = payload.get("group_by")
+    pred = Expr.from_json(payload.get("predicate"))
+    row_groups = payload.get("row_groups")
+    metas = (meta.row_groups if row_groups is None
+             else [meta.row_groups[i] for i in row_groups])
+    try:
+        state = _run_agg(obj, meta, specs, group_by, pred, metas,
+                         payload.get("max_groups"))
+    except CardinalityError:
+        return SPILL
+    return state.serialize()
+
+
 def rowcount_op(obj: ObjectHandle, payload: dict) -> bytes:
-    """COUNT(*) [WHERE pred] entirely on the storage node: decodes only the
-    predicate columns, ships back one integer (aggregate pushdown)."""
+    """COUNT(*) [WHERE pred] on the storage node — kept for its tiny
+    ``{"rows": n}`` wire contract, now the degenerate case of the agg_op
+    kernel (same code path, one count cell, no grouping)."""
     meta = _payload_footer(obj, payload)
     pred = Expr.from_json(payload.get("predicate"))
     row_groups = payload.get("row_groups")
     metas = (meta.row_groups if row_groups is None
              else [meta.row_groups[i] for i in row_groups])
-    if pred is None:
-        return json.dumps({"rows": sum(rg.num_rows for rg in metas)
-                           }).encode()
-    total = 0
-    # project exactly one predicate column (a zero-column table has no
-    # length); decode cost stays minimal
-    cols = sorted(pred.columns())[:1]
-    for rg in metas:
-        t = parquet.scan_row_group(obj, meta, rg, cols, pred)
-        total += len(t)
-    return json.dumps({"rows": total}).encode()
+    state = _run_agg(obj, meta, [AggSpec("count")], None, pred, metas,
+                     None)
+    return json.dumps({"rows": state.cells[0]}).encode()
 
 
 def checksum_op(obj: ObjectHandle, payload: dict) -> bytes:
@@ -132,6 +189,7 @@ def read_op(obj: ObjectHandle, payload: dict) -> bytes:
 def register_default_classes(store: ObjectStore):
     store.register_cls("scan_op", scan_op)
     store.register_cls("stat_op", stat_op)
+    store.register_cls("agg_op", agg_op)
     store.register_cls("rowcount_op", rowcount_op)
     store.register_cls("checksum_op", checksum_op)
     store.register_cls("read_op", read_op)

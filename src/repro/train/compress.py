@@ -71,7 +71,6 @@ def make_compressed_grad_fn(loss_fn, mesh, *, axis: str = "pod"):
     params replicated over ``axis``; batch sharded over it (pure DP across
     pods).  Within-pod sharding stays with pjit around this function.
     """
-    other = tuple(a for a in mesh.axis_names if a != axis)
 
     def per_pod(params, batch, err):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)

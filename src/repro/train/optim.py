@@ -10,7 +10,6 @@ inside the (jit'd) update, so the fp32 values never persist.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

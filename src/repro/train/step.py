@@ -7,20 +7,18 @@ materializing parameters (jax.eval_shape end to end).
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import scanner
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import api as model_api
 from repro.models import lm
-from repro.sharding import AxisRules, ShardingCtx, default_rules, tree_shardings
+from repro.sharding import AxisRules, ShardingCtx, tree_shardings
 from repro.train import optim
 
 

@@ -14,8 +14,8 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.aformat import compression, encodings, parquet
-from repro.aformat.expressions import ALL, NONE, SOME, Expr, field
-from repro.aformat.schema import Schema, schema
+from repro.aformat.expressions import ALL, NONE, Expr, field
+from repro.aformat.schema import schema
 from repro.aformat.statistics import compute_stats
 from repro.aformat.table import Column, Table
 

@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 from repro.aformat.expressions import field
-from repro.aformat.table import Table
 from repro.core import (ParquetFormat, PushdownParquetFormat, dataset,
                         make_cluster, write_flat, write_split, write_striped)
 

@@ -1,6 +1,5 @@
 """Fault tolerance: checkpoint round-trips, health, elastic downsize."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,6 @@ pytestmark = pytest.mark.slow
 from repro.core import make_cluster
 from repro.distrib import (CheckpointManager, HealthMonitor,
                            InsufficientDevicesError, plan_downsize)
-from repro.launch.mesh import make_local_mesh
 
 
 @pytest.fixture
@@ -122,7 +120,6 @@ def test_health_mark_down_and_rejoin():
 
 
 def test_plan_downsize_shrinks_data_axis_pow2():
-    mesh = make_local_mesh(1, 1)
     # fabricate shape arithmetic via a stand-in object
     class FakeMesh:
         axis_names = ("data", "model")

@@ -1,6 +1,5 @@
 """Cluster performance model + roofline HLO parsing."""
 
-import numpy as np
 import pytest
 
 from repro.dataset.format import TaskRecord

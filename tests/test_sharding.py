@@ -6,8 +6,7 @@ import pytest
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding import (bytes_per_device, default_rules, resolve_spec,
-                            tree_shardings)
+from repro.sharding import bytes_per_device, default_rules, resolve_spec
 
 
 class FakeMesh:

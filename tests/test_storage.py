@@ -6,10 +6,9 @@ import numpy as np
 import pytest
 
 from repro.aformat import parquet
-from repro.aformat.expressions import field
 from repro.aformat.table import Table
 from repro.storage import layouts
-from repro.storage.cephfs import CephFS, DirectObjectAccess, FileSource
+from repro.storage.cephfs import DirectObjectAccess, FileSource
 from repro.storage.objclass import register_default_classes
 from repro.storage.objstore import ObjectNotFound, ObjectStore, OSDDownError
 
@@ -66,7 +65,6 @@ def test_recover_osd_heals():
     store = ObjectStore(4, replication=3)
     for i in range(50):
         store.put(f"o{i}", bytes([i]))
-    victim = store.osds[1]
     store.fail_osd(1)
     for i in range(50, 60):
         store.put(f"o{i}", bytes([i]))

@@ -15,9 +15,8 @@ import pytest
 
 from repro.aformat.expressions import field
 from repro.aformat.table import Table
-from repro.core import (ParquetFormat, dataset, make_cluster, write_flat)
+from repro.core import ParquetFormat, dataset, make_cluster, write_flat
 from repro.dataset.admission import AdmissionController
-from repro.dataset.format import PushdownParquetFormat
 
 
 @pytest.fixture
