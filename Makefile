@@ -4,7 +4,7 @@ PYTHON ?= python
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-fast lint bench bench-adaptive bench-aggregate \
-	bench-fig5 bench-fig6 bench-hedged bench-smoke deps
+	bench-fig5 bench-fig6 bench-hedged bench-limit bench-smoke deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -29,10 +29,14 @@ deps:
 bench-smoke:
 	$(PYTHON) benchmarks/bench_smoke.py
 
-bench: bench-fig5 bench-fig6 bench-adaptive bench-hedged bench-aggregate
+bench: bench-fig5 bench-fig6 bench-adaptive bench-hedged bench-aggregate \
+	bench-limit
 
 bench-aggregate:
 	$(PYTHON) benchmarks/aggregate_pushdown.py
+
+bench-limit:
+	$(PYTHON) benchmarks/limit_pushdown.py
 
 bench-hedged:
 	$(PYTHON) benchmarks/hedged_straggler.py

@@ -65,10 +65,22 @@ def run_aggregate_pushdown_small() -> dict:
     return out
 
 
+def run_limit_pushdown_small() -> dict:
+    from benchmarks import limit_pushdown
+    limit_pushdown.ROWS = 80_000
+    t0 = time.perf_counter()
+    out = limit_pushdown.run()
+    out["wall_s"] = time.perf_counter() - t0
+    out["claims"] = limit_pushdown.check_claims(out)
+    out["small_config"] = True
+    return out
+
+
 BENCHES = {
     "hedged_straggler": run_hedged_straggler,
     "adaptive_scan": run_adaptive_scan_small,
     "aggregate_pushdown": run_aggregate_pushdown_small,
+    "limit_pushdown": run_limit_pushdown_small,
 }
 
 

@@ -134,6 +134,13 @@ class Table:
                                           else c.validity[idx])
                                    for c in self.columns])
 
+    def head(self, n: int) -> "Table":
+        """The first min(n, len) rows — the LIMIT row-budget slice; a
+        no-op (self) when the table is already within budget."""
+        if len(self) <= n:
+            return self
+        return self.slice(0, n)
+
     def nbytes(self) -> int:
         return sum(c.nbytes() for c in self.columns)
 

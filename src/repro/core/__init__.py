@@ -9,7 +9,7 @@ placement behind one API.  The pieces:
   register_default_classes     the ObjectClass SDK methods (scan_op, ...)
   CephFS / DirectObjectAccess  POSIX shim + filename->object translation
   write_striped / write_split / write_flat   self-contained-fragment layouts
-  dataset / Scanner            the Dataset API
+  dataset / Query / Scanner    the Dataset API (lazy query plans)
   ParquetFormat                client-side scan      (their baseline)
   PushdownParquetFormat        storage-side scan     (their RADOS Parquet)
   AdaptiveFormat / ScanScheduler   runtime placement from live OSD load,
@@ -22,8 +22,8 @@ and benchmarks.
 from __future__ import annotations
 
 from repro.dataset import (AdaptiveFormat, AggSpec, Dataset, ParquetFormat,
-                           PushdownParquetFormat, ScanScheduler, Scanner,
-                           dataset)
+                           PushdownParquetFormat, Query, ScanScheduler,
+                           Scanner, dataset)
 from repro.storage.cephfs import CephFS, DirectObjectAccess
 from repro.storage.layouts import write_flat, write_split, write_striped
 from repro.storage.objclass import register_default_classes
@@ -40,7 +40,7 @@ def make_cluster(num_osds: int = 8, *, replication: int = 3,
 
 
 __all__ = ["AggSpec", "Dataset", "ParquetFormat", "PushdownParquetFormat",
-           "AdaptiveFormat", "ScanScheduler", "Scanner", "dataset",
+           "AdaptiveFormat", "Query", "ScanScheduler", "Scanner", "dataset",
            "CephFS", "DirectObjectAccess", "write_flat", "write_split",
            "write_striped", "register_default_classes", "ObjectStore",
            "make_cluster"]

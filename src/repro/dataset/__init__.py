@@ -1,13 +1,20 @@
 from repro.aformat.aggregate import AggSpec
 from repro.dataset.admission import AdmissionController
-from repro.dataset.dataset import Dataset, ScanMetrics, Scanner, dataset
+from repro.dataset.dataset import Dataset, Scanner, dataset
 from repro.dataset.format import (AdaptiveFormat, FileFormat, ParquetFormat,
-                                  PushdownParquetFormat, TaskRecord)
+                                  PushdownParquetFormat, TaskRecord,
+                                  resolve_format)
 from repro.dataset.fragment import Fragment
+from repro.dataset.plan import (Aggregate, Count, Filter, FragmentTask,
+                                Limit, PhysicalPlan, PlanNode, Project,
+                                Query, Scan, ScanMetrics)
 from repro.dataset.scheduler import (ResultCache, ScanScheduler,
                                      modeled_latency)
 
 __all__ = ["AdmissionController", "AggSpec", "Dataset", "ScanMetrics",
            "Scanner", "dataset", "FileFormat", "ParquetFormat",
            "PushdownParquetFormat", "AdaptiveFormat", "TaskRecord",
-           "Fragment", "ResultCache", "ScanScheduler", "modeled_latency"]
+           "Fragment", "ResultCache", "ScanScheduler", "modeled_latency",
+           "Query", "PlanNode", "Scan", "Filter", "Project", "Aggregate",
+           "Limit", "Count", "FragmentTask", "PhysicalPlan",
+           "resolve_format"]

@@ -1,10 +1,12 @@
 """Dataset / Scanner — the Arrow Dataset API analogue (paper §2.2).
 
 Discovery maps a CephFS prefix to a list of self-contained Fragments for
-any of the three layouts (flat single-object files, striped, split); the
-Scanner prunes fragments on footer/index statistics (predicate pushdown),
-then scans the survivors in parallel with a bounded per-storage-node queue
-depth, through whichever FileFormat placement the caller picked:
+any of the three layouts (flat single-object files, striped, split).
+Queries are built lazily through :meth:`Dataset.query` (select / filter /
+limit / aggregate / count), optimized as a logical plan, and lowered to
+per-fragment physical tasks run by the one shared streaming executor
+(``repro.dataset.plan``) through whichever FileFormat placement the
+caller picked:
 
 * ``format="parquet"``   — client-side decode (the paper's baseline),
 * ``format="pushdown"``  — storage-side ``scan_op`` (the paper's RADOS
@@ -13,30 +15,26 @@ depth, through whichever FileFormat placement the caller picked:
   the :class:`~repro.dataset.scheduler.ScanScheduler` from live OSD load,
   with hedged storage scans and an LRU columnar result cache (this repo's
   extension past the paper's static-placement limitation).
+
+:class:`Scanner` survives as the eager compatibility wrapper: each of its
+verbs builds the equivalent lazy query and runs it, so every optimization
+written for the plan layer (pruning, projection/limit pushdown, metadata
+rewrites) applies to all verbs at once.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import struct
-import threading
-import time
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
-from itertools import islice
 from typing import Iterator, Sequence
 
-import numpy as np
-
 from repro.aformat import parquet
-from repro.aformat.aggregate import (AggState, DEFAULT_MAX_GROUPS,
-                                     parse_aggs, partial_from_stats)
-from repro.aformat.expressions import ALL, NONE, Expr
+from repro.aformat.aggregate import DEFAULT_MAX_GROUPS
+from repro.aformat.expressions import Expr
 from repro.aformat.schema import Schema
-from repro.aformat.table import Column, Table
-from repro.dataset.admission import AdmissionController
-from repro.dataset.format import (AdaptiveFormat, FileFormat, ParquetFormat,
-                                  PushdownParquetFormat, TaskRecord)
+from repro.aformat.table import Table
+from repro.dataset.format import FileFormat, resolve_format
 from repro.dataset.fragment import Fragment
+from repro.dataset.plan import Query, ScanMetrics
 from repro.storage import layouts
 from repro.storage.cephfs import CephFS
 
@@ -63,6 +61,16 @@ class Dataset:
     def num_rows(self) -> int:
         return sum(f.num_rows for f in self._fragments)
 
+    def query(self, *, format: FileFormat | str = "pushdown",
+              num_threads: int = 16, queue_depth: int = 4) -> Query:
+        """Start a lazy query: ``ds.query().select(...).filter(...)
+        .limit(n)`` / ``.aggregate(...)`` / ``.count()``, executed via
+        ``to_table`` / ``to_batches`` / ``to_scalar`` and inspectable via
+        ``explain()``.  ``format`` picks the placement exactly as in
+        :meth:`scanner`."""
+        return Query(self, format=format, num_threads=num_threads,
+                     queue_depth=queue_depth)
+
     def scanner(self, *, format: FileFormat | str = "pushdown",
                 columns: Sequence[str] | None = None,
                 predicate: Expr | None = None,
@@ -71,11 +79,7 @@ class Dataset:
         "parquet" (client-side), "pushdown" (storage-side), "adaptive"
         (scheduler-placed; pass an ``AdaptiveFormat`` instance instead to
         keep its result cache warm across scans)."""
-        if isinstance(format, str):
-            format = {"parquet": ParquetFormat,
-                      "pushdown": PushdownParquetFormat,
-                      "adaptive": AdaptiveFormat}[format]()
-        return Scanner(self, format, columns, predicate,
+        return Scanner(self, resolve_format(format), columns, predicate,
                        num_threads=num_threads, queue_depth=queue_depth)
 
 
@@ -184,57 +188,20 @@ def _discover_split(fs, index_paths) -> Dataset:
 
 
 # ---------------------------------------------------------------------------
-# Scanner
+# Scanner — eager compatibility wrappers over the lazy query plan
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class ScanMetrics:
-    tasks: list[TaskRecord] = dataclasses.field(default_factory=list)
-    fragments_total: int = 0
-    fragments_pruned: int = 0
-    discovery_bytes: int = 0
-    rows: int = 0
-    wall_s: float = 0.0
-    admission: dict = dataclasses.field(default_factory=dict)
-
-    @property
-    def client_cpu_s(self) -> float:
-        return sum(t.client_cpu_s for t in self.tasks)
-
-    @property
-    def osd_cpu_s(self) -> float:
-        return sum(t.cpu_s for t in self.tasks if t.where == "osd")
-
-    @property
-    def wire_bytes(self) -> int:
-        return self.discovery_bytes + sum(t.wire_bytes for t in self.tasks)
-
-    @property
-    def cache_hits(self) -> int:
-        return sum(1 for t in self.tasks if t.cached)
-
-    @property
-    def hedged_tasks(self) -> int:
-        return sum(1 for t in self.tasks if t.hedged)
-
-    def summary(self) -> dict:
-        return {
-            "fragments": self.fragments_total,
-            "pruned": self.fragments_pruned,
-            "rows": self.rows,
-            "wire_bytes": self.wire_bytes,
-            "client_cpu_s": round(self.client_cpu_s, 4),
-            "osd_cpu_s": round(self.osd_cpu_s, 4),
-            "wall_s": round(self.wall_s, 4),
-            "cache_hits": self.cache_hits,
-            "hedged": self.hedged_tasks,
-            "admission_waits": self.admission.get("waits", 0),
-        }
-
-
 class Scanner:
-    """Prune -> parallel scan -> materialize (paper's query execution)."""
+    """Eager facade over :class:`~repro.dataset.plan.Query`.
+
+    Every verb builds the equivalent lazy query, runs it through the one
+    optimizer + streaming executor, and snapshots that execution's
+    :class:`ScanMetrics` into ``self.metrics`` (the last run's record —
+    re-running a verb on the same Scanner never double-counts).  Prefer
+    ``Dataset.query()`` for new code; these verbs stay for the paper's
+    original API shape.
+    """
 
     def __init__(self, ds: Dataset, fmt: FileFormat,
                  columns: Sequence[str] | None, predicate: Expr | None, *,
@@ -247,94 +214,24 @@ class Scanner:
         self.queue_depth = queue_depth
         self.metrics = ScanMetrics(discovery_bytes=ds.discovery_bytes)
 
-    # -- pruning ---------------------------------------------------------------
-    def plan(self) -> list[tuple[Fragment, Expr | None]]:
-        """Stats-based row-group pruning; returns (fragment, predicate) with
-        the predicate dropped where stats prove every row matches."""
-        out = []
-        self.metrics.fragments_total = len(self.ds._fragments)
-        for frag in self.ds._fragments:
-            pred = self.predicate
-            if pred is not None and frag.stats:
-                verdict = pred.prune(frag.stats)
-                if verdict == NONE:
-                    self.metrics.fragments_pruned += 1
-                    continue
-                if verdict == ALL:
-                    pred = None
-            out.append((frag, pred))
-        return out
+    def query(self) -> Query:
+        """The lazy query equivalent to this Scanner's columns/predicate
+        (the verbs below all lower through it)."""
+        q = Query(self.ds, format=self.fmt, num_threads=self.num_threads,
+                  queue_depth=self.queue_depth)
+        if self.predicate is not None:
+            q = q.filter(self.predicate)
+        if self.columns is not None:
+            q = q.select(self.columns)
+        return q
 
-    # -- execution ---------------------------------------------------------------
-    def _fan_out(self, items, run) -> list:
-        """Run ``run`` over ``items`` on up to ``num_threads`` workers
-        (serially when that buys nothing); results in input order.  The
-        shared dispatch for every per-fragment aggregate/count fan-out —
-        the streaming scan path has its own backpressured engine."""
-        if len(items) <= 1 or self.num_threads <= 1:
-            return [run(x) for x in items]
-        with ThreadPoolExecutor(max_workers=self.num_threads) as pool:
-            return list(pool.map(run, items))
+    def explain(self) -> str:
+        """Render the plan this Scanner's ``to_table`` would run."""
+        return self.query().explain()
 
-    def _admission(self) -> AdmissionController:
-        """One admission controller per scan: every placement (client
-        byte-pulls, pushdown cls calls, adaptive either-way) draws from
-        the same bounded per-OSD slots, so no format can bury a single
-        storage node in queued fragment work."""
-        return AdmissionController(self.ds.fs.store, self.queue_depth)
-
-    def _scan_stream(self, max_inflight: int
-                     ) -> Iterator[tuple[int, Table]]:
-        """Concurrent streaming execution: at most ``max_inflight``
-        fragments are in flight at once, and a new fragment is issued only
-        when a finished one has been *consumed* — backpressure, so peak
-        client memory is O(in-flight fragments), not O(dataset).
-
-        Yields (plan index, Table) in completion order, empty results
-        included (callers filter)."""
-        plan = self.plan()
-        admission = self._admission()
-        lock = threading.Lock()
-
-        def run(idx_item):
-            idx, (frag, pred) = idx_item
-            tbl, rec = self.fmt.scan_fragment(self.ds.fs, frag,
-                                              self.columns, pred,
-                                              admission=admission)
-            with lock:
-                self.metrics.tasks.append(rec)
-            return idx, tbl
-
-        t0 = time.perf_counter()
-        items = list(enumerate(plan))
-        try:
-            if max_inflight <= 1 or len(items) <= 1:
-                for it in items:
-                    idx, tbl = run(it)
-                    self.metrics.rows += len(tbl)
-                    yield idx, tbl
-                return
-            it = iter(items)
-            with ThreadPoolExecutor(max_workers=max_inflight) as pool:
-                pending = {pool.submit(run, x)
-                           for x in islice(it, max_inflight)}
-                try:
-                    while pending:
-                        done, pending = wait(pending,
-                                             return_when=FIRST_COMPLETED)
-                        for fut in done:
-                            idx, tbl = fut.result()
-                            nxt = next(it, None)
-                            if nxt is not None:
-                                pending.add(pool.submit(run, nxt))
-                            self.metrics.rows += len(tbl)
-                            yield idx, tbl
-                finally:
-                    for fut in pending:   # consumer stopped early
-                        fut.cancel()
-        finally:
-            self.metrics.wall_s = time.perf_counter() - t0
-            self.metrics.admission = admission.stats()
+    def _run(self, q: Query, result):
+        self.metrics = q.metrics
+        return result
 
     def to_batches(self, *, max_inflight: int | None = None
                    ) -> Iterator[Table]:
@@ -344,174 +241,33 @@ class Scanner:
         consumption: a paused consumer pauses the scan after at most
         ``max_inflight`` buffered fragments.  Empty fragments are
         skipped."""
-        for _, tbl in self._scan_stream(max_inflight or self.num_threads):
-            if len(tbl):
-                yield tbl
+        q = self.query()
+        batches = q.to_batches(max_inflight=max_inflight)
+        self.metrics = q.metrics      # mutated live as batches stream
+        return batches
 
     def to_table(self) -> Table:
-        """Materialize the full result (built on the streaming engine;
-        partial tables are re-assembled in plan order)."""
-        parts = sorted(self._scan_stream(self.num_threads),
-                       key=lambda p: p[0])
-        tables = [t for _, t in parts if len(t)]
-        if tables:
-            result = Table.concat(tables)
-        else:
-            names = self.columns or self.ds.schema.names
-            sch = self.ds.schema.select(names)
-            result = Table(sch, [
-                Column(f, np.empty(0, object if f.type == "string"
-                                   else f.numpy_dtype)) for f in sch])
-        self.metrics.rows = len(result)
-        return result
+        """Materialize the full result (plan order)."""
+        q = self.query()
+        return self._run(q, q.to_table())
 
     def aggregate(self, aggs, *, group_by: str | None = None,
                   max_groups: int = DEFAULT_MAX_GROUPS) -> Table:
         """SUM/MIN/MAX/MEAN/COUNT — optionally GROUP BY one key column —
-        with storage-side partial aggregation.
-
-        ``aggs`` is a list of :class:`~repro.aformat.aggregate.AggSpec`,
-        ``(op, column)`` tuples, or ``"op(column)"`` strings ("count"
-        alone is COUNT(*)).  Per fragment: stats prove NONE -> pruned;
-        ungrouped, predicate-free count/min/max -> answered from footer
-        metadata with zero I/O; everything else fans out over
-        ``num_threads`` (admission-bounded per OSD) through the format's
-        ``aggregate_fragment`` placement — ``agg_op`` partial states on
-        the wire for pushdown, placement-priced / hedged / result-cached
-        through the scheduler for ``format="adaptive"``, a
-        projected-column scan folded locally for the client format.
-        Partial states merge in completion order; the merged state is
-        finalized into a result Table (one row ungrouped, one row per
-        key, sorted, grouped).  ``max_groups`` bounds storage-side group
-        cardinality — past it a fragment spills to a scan."""
-        specs = parse_aggs(aggs)
-        for s in specs:                 # validate early, not per-fragment
-            if s.column is not None:
-                self.ds.schema.field(s.column)
-        if group_by is not None:
-            self.ds.schema.field(group_by)
-        state = AggState.empty(specs, group_by)
-        admission = self._admission()
-        lock = threading.Lock()
-        remote: list[tuple[Fragment, Expr | None]] = []
-        t0 = time.perf_counter()
-        for frag, pred in self.plan():
-            if pred is None and group_by is None and frag.stats:
-                part = partial_from_stats(specs, frag.stats,
-                                          frag.num_rows, self.ds.schema)
-                if part is not None:    # metadata-only: zero I/O
-                    state.merge(part)
-                    self.metrics.tasks.append(TaskRecord(
-                        "client", -1, 0.0, 0, 0.0, frag.num_rows,
-                        cached=True))
-                    continue
-            remote.append((frag, pred))
-
-        def run(item):
-            frag, pred = item
-            part, rec = self.fmt.aggregate_fragment(
-                self.ds.fs, frag, specs, group_by, pred,
-                schema=self.ds.schema, max_groups=max_groups,
-                admission=admission)
-            with lock:                  # merge in completion order
-                state.merge(part)
-                self.metrics.tasks.append(rec)
-
-        try:
-            self._fan_out(remote, run)
-        finally:
-            self.metrics.rows = state.rows
-            self.metrics.wall_s = time.perf_counter() - t0
-            self.metrics.admission = admission.stats()
-        return state.finalize(self.ds.schema)
+        with storage-side partial aggregation (see ``Query.aggregate``):
+        stats-pruned, footer-metadata-answered where provable, fanned out
+        through the shared executor, partial states merged in completion
+        order."""
+        q = self.query().aggregate(aggs, group_by=group_by,
+                                   max_groups=max_groups)
+        return self._run(q, q.to_table())
 
     def count_rows(self) -> int:
-        """COUNT(*) with aggregate pushdown (the S3-Select-style extension
-        of the paper's scan_op).
-
-        Per fragment: stats prove ALL -> count from metadata with zero
-        I/O; stats prove NONE -> pruned; otherwise only an integer
-        crosses the wire — via ``rowcount_op`` on the storage node for
-        the static pushdown format (fanned out over ``num_threads``,
-        admission-bounded like any scan), or via the adaptive scheduler
-        (placement-priced, hedged, result-cached) for
-        ``format="adaptive"``.  Only the client-side format falls back to
-        a materializing scan."""
-        import json
-
-        from repro.storage.cephfs import DirectObjectAccess
-
-        if isinstance(self.fmt, AdaptiveFormat):
-            return self._count_rows_adaptive()
-        if not isinstance(self.fmt, PushdownParquetFormat):
-            return len(self.to_table())
-        total = 0
-        self.metrics.fragments_total = len(self.ds._fragments)
-        doa = DirectObjectAccess(self.ds.fs)
-        admission = self._admission()
-        lock = threading.Lock()
-        remote: list[Fragment] = []
-        for frag in self.ds._fragments:
-            pred = self.predicate
-            if pred is None:
-                total += frag.num_rows          # metadata-only count
-                continue
-            if frag.stats:
-                verdict = pred.prune(frag.stats)
-                if verdict == NONE:
-                    self.metrics.fragments_pruned += 1
-                    continue
-                if verdict == ALL:
-                    total += frag.num_rows      # metadata-only count
-                    continue
-            remote.append(frag)
-
-        def run(frag: Fragment) -> int:
-            payload: dict = {
-                "predicate": self.predicate.to_json(),
-                "row_groups": [frag.rg_in_object],
-            }
-            if frag.footer is not None:
-                payload["footer"] = frag.footer.serialize()
-            name = self.ds.fs.object_names(frag.path)[frag.obj_idx]
-            with admission.admit_object(name):
-                out, osd_id, el = doa.call(frag.path, frag.obj_idx,
-                                           "rowcount_op", payload)
-            n = json.loads(out)["rows"]
-            with lock:
-                self.metrics.tasks.append(TaskRecord(
-                    "osd", osd_id, el, len(out), 0.0, n))
-            return n
-
-        total += sum(self._fan_out(remote, run))
-        self.metrics.rows = total
-        self.metrics.admission = admission.stats()
-        return total
-
-    def _count_rows_adaptive(self) -> int:
-        """COUNT(*) through the adaptive scheduler: metadata-provable
-        fragments never leave the client, everything else is a
-        placement-priced, result-cached ``rowcount_op`` — fanned out over
-        ``num_threads`` like a scan (admission bounds per-OSD pressure)."""
-        sched = self.fmt.scheduler_for(self.ds.fs)
-        admission = self._admission()
-        lock = threading.Lock()
-        total = 0
-        remote: list[tuple[Fragment, Expr]] = []
-        for frag, pred in self.plan():      # same pruning as every scan
-            if pred is None:
-                total += frag.num_rows      # metadata-only count
-            else:
-                remote.append((frag, pred))
-
-        def run(item):
-            frag, pred = item
-            n, rec = sched.count_fragment(frag, pred, admission=admission)
-            with lock:
-                self.metrics.tasks.append(rec)
-            return n
-
-        total += sum(self._fan_out(remote, run))
-        self.metrics.rows = total
-        self.metrics.admission = admission.stats()
-        return total
+        """COUNT(*): the degenerate ungrouped aggregate.  Stats-provable
+        fragments are answered from metadata with zero I/O; the rest ship
+        only integers (``rowcount_op`` for the static pushdown format,
+        placement-priced / hedged / result-cached through the scheduler
+        for ``format="adaptive"``); only the client-side format decodes a
+        column to count it."""
+        q = self.query().count()
+        return self._run(q, int(q.to_scalar()))

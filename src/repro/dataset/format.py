@@ -59,7 +59,8 @@ class FileFormat:
     def scan_fragment(self, fs: CephFS, frag: Fragment,
                       columns: Sequence[str] | None,
                       predicate: Expr | None,
-                      admission=None) -> tuple[Table, TaskRecord]:
+                      admission=None,
+                      limit: int | None = None) -> tuple[Table, TaskRecord]:
         raise NotImplementedError
 
     def aggregate_fragment(self, fs: CephFS, frag: Fragment,
@@ -75,6 +76,60 @@ class FileFormat:
         return aggregate_client(self, fs, frag, specs, group_by,
                                 predicate, schema=schema,
                                 admission=admission)
+
+    def execute_task(self, fs: CephFS, task, admission=None):
+        """The single physical-task entry point the shared query executor
+        routes through: one ``FragmentTask`` in (see ``dataset.plan``),
+        one (Table | AggState, TaskRecord) out.  Dispatches to the
+        format's ``scan_fragment`` / ``aggregate_fragment`` placement.
+        The ``limit`` kwarg is only forwarded when the task carries a row
+        budget, so format subclasses that predate limit pushdown keep
+        working for unbounded scans."""
+        if task.kind == "scan":
+            if task.limit is not None:
+                return self.scan_fragment(fs, task.fragment, task.columns,
+                                          task.predicate,
+                                          admission=admission,
+                                          limit=task.limit)
+            return self.scan_fragment(fs, task.fragment, task.columns,
+                                      task.predicate, admission=admission)
+        return self.aggregate_fragment(fs, task.fragment, task.specs,
+                                       task.group_by, task.predicate,
+                                       schema=task.schema,
+                                       max_groups=task.max_groups,
+                                       admission=admission)
+
+    def explain_task(self, fs: CephFS, task) -> str:
+        """One-line placement/cache/hedge annotation for ``explain()``."""
+        return f"placement={self.name}"
+
+
+def resolve_format(format: "FileFormat | str") -> "FileFormat":
+    """Resolve the Scanner/Query ``format`` argument: a FileFormat
+    instance passes through; a known name constructs a fresh instance; an
+    unknown value raises a ValueError naming the choices."""
+    if isinstance(format, FileFormat):
+        return format
+    choices = {"parquet": ParquetFormat, "pushdown": PushdownParquetFormat,
+               "adaptive": AdaptiveFormat}
+    if isinstance(format, str) and format in choices:
+        return choices[format]()
+    raise ValueError(
+        f"unknown format {format!r}: pass one of "
+        f"{sorted(choices)} or a FileFormat instance")
+
+
+def is_degenerate_count(specs: Sequence[AggSpec],
+                        group_by: str | None) -> bool:
+    """Ungrouped bare COUNT(*): the case with the tiny ``rowcount_op``
+    ``{"rows": n}`` wire contract (an integer, not a partial state)."""
+    return (group_by is None and len(specs) == 1
+            and specs[0].op == "count" and specs[0].column is None)
+
+
+def count_state(n: int) -> AggState:
+    """The degenerate COUNT(*) partial state for ``n`` matched rows."""
+    return AggState([AggSpec("count")], None, cells=[int(n)], rows=int(n))
 
 
 def aggregate_client(fmt: FileFormat, fs: CephFS, frag: Fragment,
@@ -113,7 +168,8 @@ class ParquetFormat(FileFormat):
 
     name = "parquet"
 
-    def scan_fragment(self, fs, frag, columns, predicate, admission=None):
+    def scan_fragment(self, fs, frag, columns, predicate, admission=None,
+                      limit=None):
         wire = 0
 
         def on_read(n):
@@ -128,20 +184,33 @@ class ParquetFormat(FileFormat):
                 meta = parquet.read_footer(src)
             rg = meta.row_groups[frag.client_rg_index]
             tbl = parquet.scan_row_group(src, meta, rg, columns, predicate)
+            if limit is not None:
+                # the raw chunk bytes already crossed the wire (client
+                # placement decodes whole chunks); the slice only trims
+                # what the caller materializes
+                tbl = tbl.head(limit)
             cpu = time.perf_counter() - t0
         rec = TaskRecord("client", -1, cpu, wire, cpu, len(tbl))
         return tbl, rec
 
+    def explain_task(self, fs, task):
+        return "placement=client"
 
-def scan_payload(frag: Fragment, columns, predicate) -> dict[str, Any]:
+
+def scan_payload(frag: Fragment, columns, predicate,
+                 limit: int | None = None) -> dict[str, Any]:
     """The ``scan_op`` request for one fragment — shared by the static
     pushdown format and the adaptive scheduler so the wire contract can
-    never diverge between the two."""
+    never diverge between the two.  ``limit`` is the scan's remaining row
+    budget: the storage node stops decoding once it is met and ships at
+    most that many rows."""
     payload: dict[str, Any] = {
         "columns": list(columns) if columns is not None else None,
         "predicate": predicate.to_json() if predicate is not None else None,
         "row_groups": [frag.rg_in_object],
     }
+    if limit is not None:
+        payload["limit"] = int(limit)
     if frag.footer is not None:
         payload["footer"] = frag.footer.serialize()
     return payload
@@ -184,9 +253,10 @@ class PushdownParquetFormat(FileFormat):
     def __init__(self, *, hedge_threshold_s: float | None = None):
         self.hedge_threshold_s = hedge_threshold_s
 
-    def scan_fragment(self, fs, frag, columns, predicate, admission=None):
+    def scan_fragment(self, fs, frag, columns, predicate, admission=None,
+                      limit=None):
         doa = DirectObjectAccess(fs)
-        payload = scan_payload(frag, columns, predicate)
+        payload = scan_payload(frag, columns, predicate, limit)
         with _admit_fragment(fs, frag, admission):
             if self.hedge_threshold_s is not None:
                 result, osd_id, el, hedged = doa.call_hedged(
@@ -209,7 +279,11 @@ class PushdownParquetFormat(FileFormat):
         """``agg_op`` on the storage node: only the serialized partial
         state crosses the wire.  A SPILL reply (cardinality over
         ``max_groups``) falls back to the storage-side *scan* — filtered
-        columns ship, the client folds them (spill-to-scan)."""
+        columns ship, the client folds them (spill-to-scan).  The
+        degenerate ungrouped COUNT(*) keeps the historic ``rowcount_op``
+        contract: a bare integer on the wire, not a partial state."""
+        if is_degenerate_count(specs, group_by):
+            return self._count_fragment(fs, frag, predicate, admission)
         doa = DirectObjectAccess(fs)
         payload = agg_payload(frag, specs, group_by, predicate, max_groups)
         with _admit_fragment(fs, frag, admission):
@@ -235,6 +309,36 @@ class PushdownParquetFormat(FileFormat):
         rec = TaskRecord("osd", osd_id, el, len(raw), client_cpu,
                          state.rows, hedged=hedged)
         return state, rec
+
+    def _count_fragment(self, fs, frag, predicate, admission):
+        """COUNT(*) [WHERE pred] via ``rowcount_op``: only an integer
+        crosses the wire."""
+        doa = DirectObjectAccess(fs)
+        payload: dict[str, Any] = {
+            "predicate": predicate.to_json()
+            if predicate is not None else None,
+            "row_groups": [frag.rg_in_object],
+        }
+        if frag.footer is not None:
+            payload["footer"] = frag.footer.serialize()
+        with _admit_fragment(fs, frag, admission):
+            if self.hedge_threshold_s is not None:
+                raw, osd_id, el, hedged = doa.call_hedged(
+                    frag.path, frag.obj_idx, "rowcount_op", payload,
+                    hedge_threshold_s=self.hedge_threshold_s)
+            else:
+                raw, osd_id, el = doa.call(frag.path, frag.obj_idx,
+                                           "rowcount_op", payload)
+                hedged = False
+        n = json.loads(raw)["rows"]
+        rec = TaskRecord("osd", osd_id, el, len(raw), 0.0, n,
+                         hedged=hedged)
+        return count_state(n), rec
+
+    def explain_task(self, fs, task):
+        hedge = (f" hedge@{self.hedge_threshold_s}s"
+                 if self.hedge_threshold_s is not None else "")
+        return f"placement=osd{hedge}"
 
 
 class AdaptiveFormat(FileFormat):
@@ -268,10 +372,12 @@ class AdaptiveFormat(FileFormat):
                 self._schedulers[id(fs)] = sched
             return sched
 
-    def scan_fragment(self, fs, frag, columns, predicate, admission=None):
+    def scan_fragment(self, fs, frag, columns, predicate, admission=None,
+                      limit=None):
         return self.scheduler_for(fs).scan_fragment(frag, columns,
                                                     predicate,
-                                                    admission=admission)
+                                                    admission=admission,
+                                                    limit=limit)
 
     def aggregate_fragment(self, fs, frag, specs, group_by, predicate, *,
                            schema, max_groups=DEFAULT_MAX_GROUPS,
@@ -279,6 +385,29 @@ class AdaptiveFormat(FileFormat):
         return self.scheduler_for(fs).aggregate_fragment(
             frag, specs, group_by, predicate, schema=schema,
             max_groups=max_groups, admission=admission)
+
+    def explain_task(self, fs, task):
+        """Live placement estimate + result-cache probe for explain().
+        The probe mirrors the executor's key choice exactly (scan /
+        degenerate-count / aggregate); for limited scans it uses the
+        plan-time budget, which is what the first-issued tasks run
+        with."""
+        sched = self.scheduler_for(fs)
+        frag = task.fragment
+        est = sched.estimate(frag)
+        if task.kind == "scan":
+            key = sched.cache_key(frag, task.columns, task.predicate,
+                                  task.limit)
+        elif is_degenerate_count(task.specs, task.group_by):
+            key = sched.count_cache_key(frag, task.predicate)
+        else:
+            key = sched.agg_cache_key(frag, task.specs, task.group_by,
+                                      task.max_groups, task.predicate)
+        cached = sched.cache.contains(key)
+        return (f"placement={est.where} est_osd={est.est_osd_s * 1e3:.2f}ms "
+                f"est_client={est.est_client_s * 1e3:.2f}ms "
+                f"pressure={est.pressure:.2f} "
+                f"cached={'yes' if cached else 'no'}")
 
     def stats(self) -> dict:
         """Decision/hedge/cache counters, summed across every cluster

@@ -1,0 +1,965 @@
+"""Lazy query plans: one logical IR, one optimizer, one executor.
+
+Every Scanner verb used to carry its own prune/fan-out body, so each new
+optimization had to be written three times (``to_table``, ``aggregate``,
+``count_rows``).  This module replaces those verb-private paths with a
+declarative pipeline:
+
+builder (``Dataset.query()``)
+    ``ds.query().select(cols).filter(pred).limit(n)`` /
+    ``.aggregate(aggs, group_by=...)`` / ``.count()`` construct a small
+    logical-plan IR (Scan / Filter / Project / Aggregate / Limit nodes,
+    plus Count sugar) without touching storage.
+
+optimizer (``lower``)
+    Named passes rewrite the logical plan and lower it to per-fragment
+    physical tasks: ``rewrite_count`` (COUNT(*) is the degenerate
+    ungrouped aggregate), ``pushdown_projection`` (decode only referenced
+    columns), ``prune_fragments`` (footer-stats pruning; ALL-verdicts
+    drop the residual predicate), ``rewrite_metadata_aggregate``
+    (aggregates provable from footer stats never touch storage), and
+    ``pushdown_limit`` (a row budget truncates the task list at plan time
+    and rides into ``scan_op`` so storage nodes stop decoding early).
+
+executor (``execute_scan`` / ``execute_aggregate``)
+    One shared streaming engine (the backpressured, admission-bounded
+    engine from the streaming-scan PR) runs the physical tasks for every
+    verb and every placement via ``FileFormat.execute_task``.  A limit is
+    a live row budget: once met, no further fragments are issued and
+    still-queued work is cancelled.
+
+``Query.explain()`` renders the logical plan, the optimizer's decisions,
+and the per-fragment physical tasks with their placement/cache/hedge
+state — the debugging and benchmarking surface for all of the above.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from itertools import islice
+from typing import Any, Iterator, Sequence
+
+import numpy as np
+
+from repro.aformat.aggregate import (
+    AggSpec,
+    AggState,
+    DEFAULT_MAX_GROUPS,
+    needed_columns,
+    parse_aggs,
+    partial_from_stats,
+)
+from repro.aformat.expressions import ALL, And, Cmp, Expr, IsIn, NONE, Not, Or
+from repro.aformat.table import Column, Table
+from repro.dataset.admission import AdmissionController
+from repro.dataset.format import TaskRecord, resolve_format
+from repro.dataset.fragment import Fragment
+
+# ---------------------------------------------------------------------------
+# Logical plan IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PlanNode:
+    """Base logical-plan node.  The tree is linear (each node has one
+    input); ``Scan`` is the leaf."""
+
+    def children(self) -> list["PlanNode"]:
+        return []
+
+
+@dataclasses.dataclass
+class Scan(PlanNode):
+    """Leaf: read a Dataset's fragments.  ``columns`` is filled in by the
+    projection-pushdown pass (None = every column)."""
+
+    dataset: Any
+    columns: tuple[str, ...] | None = None
+
+
+@dataclasses.dataclass
+class Filter(PlanNode):
+    input: PlanNode
+    predicate: Expr
+
+    def children(self):
+        return [self.input]
+
+
+@dataclasses.dataclass
+class Project(PlanNode):
+    input: PlanNode
+    columns: tuple[str, ...]
+
+    def children(self):
+        return [self.input]
+
+
+@dataclasses.dataclass
+class Aggregate(PlanNode):
+    input: PlanNode
+    specs: tuple[AggSpec, ...]
+    group_by: str | None = None
+    max_groups: int = DEFAULT_MAX_GROUPS
+
+    def children(self):
+        return [self.input]
+
+
+@dataclasses.dataclass
+class Limit(PlanNode):
+    input: PlanNode
+    n: int
+
+    def children(self):
+        return [self.input]
+
+
+@dataclasses.dataclass
+class Count(PlanNode):
+    """Builder sugar for ``.count()``; the ``rewrite_count`` pass lowers
+    it to the degenerate ungrouped COUNT(*) Aggregate."""
+
+    input: PlanNode
+
+    def children(self):
+        return [self.input]
+
+
+def render_expr(e: Expr | None) -> str:
+    if e is None:
+        return "true"
+    if isinstance(e, Cmp):
+        return f"{e.column} {e.op} {e.value!r}"
+    if isinstance(e, And):
+        return f"({render_expr(e.lhs)} & {render_expr(e.rhs)})"
+    if isinstance(e, Or):
+        return f"({render_expr(e.lhs)} | {render_expr(e.rhs)})"
+    if isinstance(e, Not):
+        return f"~({render_expr(e.expr)})"
+    if isinstance(e, IsIn):
+        return f"{e.column} in {e.values!r}"
+    return repr(e)
+
+
+def render_plan(root: PlanNode) -> list[str]:
+    """Indented one-node-per-line rendering of a logical plan."""
+
+    def label(n: PlanNode) -> str:
+        if isinstance(n, Scan):
+            ds = n.dataset
+            cols = "*" if n.columns is None else ", ".join(n.columns)
+            return (
+                f"Scan[{ds.layout}, fragments={len(ds._fragments)}, "
+                f"rows={ds.num_rows}, columns={cols}]"
+            )
+        if isinstance(n, Filter):
+            return f"Filter[{render_expr(n.predicate)}]"
+        if isinstance(n, Project):
+            return f"Project[{', '.join(n.columns)}]"
+        if isinstance(n, Aggregate):
+            aggs = ", ".join(s.name for s in n.specs)
+            by = f", group_by={n.group_by}" if n.group_by else ""
+            return f"Aggregate[{aggs}{by}]"
+        if isinstance(n, Limit):
+            return f"Limit[n={n.n}]"
+        if isinstance(n, Count):
+            return "Count[]"
+        return type(n).__name__
+
+    lines: list[str] = []
+    node, depth = root, 0
+    while node is not None:
+        lines.append("  " * depth + label(node))
+        kids = node.children()
+        node = kids[0] if kids else None
+        depth += 1
+    return lines
+
+
+# ---------------------------------------------------------------------------
+# Optimizer passes (logical -> logical, then logical -> physical)
+# ---------------------------------------------------------------------------
+
+
+def rewrite_count(root: PlanNode) -> PlanNode:
+    """COUNT(*) is the degenerate ungrouped aggregate: rewrite the Count
+    sugar node so one aggregation path serves both verbs (and the
+    metadata / ``rowcount_op`` fast paths apply automatically)."""
+    if isinstance(root, Count):
+        return Aggregate(root.input, (AggSpec("count"),), None)
+    kids = root.children()
+    if kids:
+        root.input = rewrite_count(kids[0])  # type: ignore[attr-defined]
+    return root
+
+
+@dataclasses.dataclass
+class _QuerySpec:
+    """A validated, normalized view of the (linear) logical plan."""
+
+    scan: Scan
+    predicate: Expr | None
+    project: tuple[str, ...] | None
+    aggregate: Aggregate | None
+    limit: int | None
+
+
+def _decompose(root: PlanNode) -> _QuerySpec:
+    predicate: Expr | None = None
+    project: tuple[str, ...] | None = None
+    aggregate: Aggregate | None = None
+    limit: int | None = None
+    seen_relational = False
+    node = root
+    while not isinstance(node, Scan):
+        if isinstance(node, Limit):
+            if aggregate is not None:
+                # a Limit *below* the aggregate would mean "aggregate
+                # any n rows" — refused at build time too (see
+                # Query._require_unlimited)
+                raise ValueError(
+                    "aggregate()/count() over a limit()ed input is not "
+                    "supported"
+                )
+            limit = node.n if limit is None else min(limit, node.n)
+        elif isinstance(node, Aggregate):
+            if aggregate is not None:
+                raise ValueError("nested aggregates are not supported")
+            if seen_relational:
+                raise ValueError(
+                    "filter()/select() above aggregate() is not supported"
+                )
+            aggregate = node
+        elif isinstance(node, Project):
+            seen_relational = True
+            if project is None:  # outermost projection wins
+                project = tuple(node.columns)
+        elif isinstance(node, Filter):
+            seen_relational = True
+            predicate = (
+                node.predicate
+                if predicate is None
+                else And(node.predicate, predicate)
+            )
+        elif isinstance(node, Count):
+            raise ValueError("Count node left in plan: run rewrite_count")
+        else:
+            raise ValueError(f"unknown plan node {type(node).__name__}")
+        node = node.children()[0]
+    return _QuerySpec(node, predicate, project, aggregate, limit)
+
+
+def pushdown_projection(
+    spec: _QuerySpec, schema
+) -> tuple[tuple[str, ...] | None, str]:
+    """Columns the scan must decode: for a plain scan, the projected
+    output columns (predicate columns are decoded transiently by
+    ``scan_row_group`` itself); for an aggregate, exactly the columns the
+    aggregate kernel references.  Returns (columns, explain note)."""
+    if spec.aggregate is not None:
+        cols = tuple(
+            needed_columns(
+                list(spec.aggregate.specs),
+                spec.aggregate.group_by,
+                schema,
+                spec.predicate,
+            )
+        )
+        return cols, f"aggregate references [{', '.join(cols)}]"
+    if spec.project is not None:
+        return spec.project, f"scan ships [{', '.join(spec.project)}]"
+    return None, "no projection (all columns ship)"
+
+
+@dataclasses.dataclass
+class FragmentDecision:
+    """One fragment's fate through the optimizer, for ``explain()``."""
+
+    fragment: Fragment
+    action: str  # "pruned" | "metadata" | "task" | "limit-dropped"
+    detail: str = ""
+
+
+def prune_fragments(
+    fragments: Sequence[Fragment], predicate: Expr | None
+) -> tuple[list[tuple[Fragment, Expr | None]], list[FragmentDecision]]:
+    """Footer-stats pruning: NONE-verdict fragments are dropped, ALL
+    verdicts drop the residual predicate (the fragment is taken whole)."""
+    survivors: list[tuple[Fragment, Expr | None]] = []
+    decisions: list[FragmentDecision] = []
+    for frag in fragments:
+        pred = predicate
+        if pred is not None and frag.stats:
+            verdict = pred.prune(frag.stats)
+            if verdict == NONE:
+                decisions.append(
+                    FragmentDecision(frag, "pruned", "stats prove NONE")
+                )
+                continue
+            if verdict == ALL:
+                pred = None
+        survivors.append((frag, pred))
+    return survivors, decisions
+
+
+def rewrite_metadata_aggregate(
+    survivors: Sequence[tuple[Fragment, Expr | None]],
+    specs: Sequence[AggSpec],
+    group_by: str | None,
+    schema,
+) -> tuple[
+    list[tuple[Fragment, Expr | None]], AggState, list[FragmentDecision]
+]:
+    """Zero-I/O rewrite: ungrouped aggregates over predicate-free
+    fragments answerable from footer statistics merge straight into the
+    seed state; only the rest become physical tasks."""
+    state = AggState.empty(list(specs), group_by)
+    remaining: list[tuple[Fragment, Expr | None]] = []
+    decisions: list[FragmentDecision] = []
+    for frag, pred in survivors:
+        if pred is None and group_by is None:
+            part = None
+            if frag.stats:
+                part = partial_from_stats(
+                    list(specs), frag.stats, frag.num_rows, schema
+                )
+            elif all(s.op == "count" and s.column is None for s in specs):
+                part = AggState(
+                    list(specs),
+                    None,
+                    cells=[int(frag.num_rows) for _ in specs],
+                    rows=frag.num_rows,
+                )
+            if part is not None:
+                state.merge(part)
+                decisions.append(
+                    FragmentDecision(
+                        frag, "metadata", f"footer answers {frag.num_rows} rows"
+                    )
+                )
+                continue
+        remaining.append((frag, pred))
+    return remaining, state, decisions
+
+
+def pushdown_limit(
+    survivors: Sequence[tuple[Fragment, Expr | None]], limit: int | None
+) -> tuple[
+    list[tuple[Fragment, Expr | None]], list[FragmentDecision], int | None
+]:
+    """Plan-time limit truncation: walking plan order, once predicate-free
+    fragments alone guarantee ``limit`` rows, every later fragment is
+    dropped before any I/O is planned for it.  The returned budget is
+    enforced again at run time (early exit) for the fragments that carry
+    residual predicates."""
+    if limit is None:
+        return list(survivors), [], None
+    kept: list[tuple[Fragment, Expr | None]] = []
+    decisions: list[FragmentDecision] = []
+    guaranteed = 0
+    for frag, pred in survivors:
+        if guaranteed >= limit:
+            decisions.append(
+                FragmentDecision(
+                    frag, "limit-dropped", f"{guaranteed} rows already sure"
+                )
+            )
+            continue
+        kept.append((frag, pred))
+        if pred is None:
+            guaranteed += frag.num_rows
+    return kept, decisions, limit
+
+
+# ---------------------------------------------------------------------------
+# Physical plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FragmentTask:
+    """One unit of physical work: scan or partially aggregate one
+    fragment at whatever placement the FileFormat picks.  ``limit`` is
+    refreshed by the executor to the live remaining row budget just
+    before the task is issued."""
+
+    index: int
+    kind: str  # "scan" | "aggregate"
+    fragment: Fragment
+    columns: Sequence[str] | None = None
+    predicate: Expr | None = None
+    specs: Sequence[AggSpec] | None = None
+    group_by: str | None = None
+    max_groups: int = DEFAULT_MAX_GROUPS
+    schema: Any = None
+    limit: int | None = None
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    """The optimized, lowered plan: per-fragment tasks plus everything
+    the optimizer already answered without I/O."""
+
+    kind: str  # "scan" | "aggregate"
+    dataset: Any
+    tasks: list[FragmentTask]
+    decisions: list[FragmentDecision]
+    passes: list[str]
+    columns: list[str] | None = None  # scan output projection
+    specs: list[AggSpec] | None = None
+    group_by: str | None = None
+    max_groups: int = DEFAULT_MAX_GROUPS
+    limit: int | None = None
+    metadata_state: AggState | None = None
+    metadata_answers: int = 0
+    fragments_total: int = 0
+    fragments_pruned: int = 0
+
+
+def lower(root: PlanNode) -> PhysicalPlan:
+    """Run every optimizer pass and lower the logical plan to per-fragment
+    physical tasks."""
+    passes: list[str] = []
+    had_count = isinstance(root, Count) or any(
+        isinstance(n, Count) for n in _walk(root)
+    )
+    root = rewrite_count(root)
+    if had_count:
+        passes.append("count-as-aggregate: COUNT(*) lowered to Aggregate")
+    spec = _decompose(root)
+    ds = spec.scan.dataset
+    schema = ds.schema
+
+    scan_cols, note = pushdown_projection(spec, schema)
+    spec.scan.columns = scan_cols
+    passes.append(f"projection-pushdown: {note}")
+
+    fragments = list(ds._fragments)
+    survivors, prune_dec = prune_fragments(fragments, spec.predicate)
+    n_all = sum(
+        1
+        for (f, p) in survivors
+        if p is None and spec.predicate is not None
+    )
+    passes.append(
+        f"stats-pruning: {len(prune_dec)} of {len(fragments)} fragments "
+        f"pruned, {n_all} predicate-free after ALL verdicts"
+    )
+
+    decisions = list(prune_dec)
+    meta_state: AggState | None = None
+    meta_answers = 0
+    if spec.aggregate is not None:
+        agg = spec.aggregate
+        survivors, meta_state, meta_dec = rewrite_metadata_aggregate(
+            survivors, agg.specs, agg.group_by, schema
+        )
+        meta_answers = len(meta_dec)
+        decisions.extend(meta_dec)
+        passes.append(
+            f"metadata-rewrite: {meta_answers} fragments answered from "
+            "footer stats (zero I/O)"
+        )
+        tasks = [
+            FragmentTask(
+                i,
+                "aggregate",
+                frag,
+                predicate=pred,
+                specs=list(agg.specs),
+                group_by=agg.group_by,
+                max_groups=agg.max_groups,
+                schema=schema,
+            )
+            for i, (frag, pred) in enumerate(survivors)
+        ]
+        limit = spec.limit  # applies to the finalized table client-side
+    else:
+        survivors, limit_dec, limit = pushdown_limit(survivors, spec.limit)
+        if spec.limit is not None:
+            passes.append(
+                f"limit-pushdown: row budget {spec.limit}; plan truncated "
+                f"to {len(survivors)} tasks ({len(limit_dec)} dropped), "
+                "budget rides into scan_op"
+            )
+        decisions.extend(limit_dec)
+        tasks = [
+            FragmentTask(
+                i,
+                "scan",
+                frag,
+                columns=list(scan_cols) if scan_cols is not None else None,
+                predicate=pred,
+                limit=limit,
+            )
+            for i, (frag, pred) in enumerate(survivors)
+        ]
+    decisions.extend(
+        FragmentDecision(t.fragment, "task", render_expr(t.predicate))
+        for t in tasks
+    )
+    return PhysicalPlan(
+        kind="scan" if spec.aggregate is None else "aggregate",
+        dataset=ds,
+        tasks=tasks,
+        decisions=decisions,
+        passes=passes,
+        columns=list(scan_cols)
+        if scan_cols is not None and spec.aggregate is None
+        else None,
+        specs=list(spec.aggregate.specs) if spec.aggregate else None,
+        group_by=spec.aggregate.group_by if spec.aggregate else None,
+        max_groups=spec.aggregate.max_groups
+        if spec.aggregate
+        else DEFAULT_MAX_GROUPS,
+        limit=limit if spec.aggregate is None else spec.limit,
+        metadata_state=meta_state,
+        metadata_answers=meta_answers,
+        fragments_total=len(fragments),
+        fragments_pruned=len(prune_dec),
+    )
+
+
+def _walk(root: PlanNode) -> Iterator[PlanNode]:
+    node: PlanNode | None = root
+    while node is not None:
+        yield node
+        kids = node.children()
+        node = kids[0] if kids else None
+
+
+# ---------------------------------------------------------------------------
+# Scan metrics (every verb records these uniformly)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScanMetrics:
+    tasks: list[TaskRecord] = dataclasses.field(default_factory=list)
+    fragments_total: int = 0
+    fragments_pruned: int = 0
+    metadata_answers: int = 0  # fragments answered from footer stats
+    discovery_bytes: int = 0
+    rows: int = 0
+    wall_s: float = 0.0
+    admission: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def client_cpu_s(self) -> float:
+        return sum(t.client_cpu_s for t in self.tasks)
+
+    @property
+    def osd_cpu_s(self) -> float:
+        return sum(t.cpu_s for t in self.tasks if t.where == "osd")
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.discovery_bytes + sum(t.wire_bytes for t in self.tasks)
+
+    @property
+    def cache_hits(self) -> int:
+        return sum(1 for t in self.tasks if t.cached)
+
+    @property
+    def hedged_tasks(self) -> int:
+        return sum(1 for t in self.tasks if t.hedged)
+
+    def summary(self) -> dict:
+        return {
+            "fragments": self.fragments_total,
+            "pruned": self.fragments_pruned,
+            "metadata_answers": self.metadata_answers,
+            "rows": self.rows,
+            "wire_bytes": self.wire_bytes,
+            "client_cpu_s": round(self.client_cpu_s, 4),
+            "osd_cpu_s": round(self.osd_cpu_s, 4),
+            "wall_s": round(self.wall_s, 4),
+            "cache_hits": self.cache_hits,
+            "hedged": self.hedged_tasks,
+            "admission_waits": self.admission.get("waits", 0),
+        }
+
+
+# ---------------------------------------------------------------------------
+# The shared streaming executor
+# ---------------------------------------------------------------------------
+
+
+def stream_tasks(
+    plan: PhysicalPlan,
+    fmt,
+    metrics: ScanMetrics,
+    *,
+    max_inflight: int,
+    queue_depth: int,
+) -> Iterator[tuple[FragmentTask, Any]]:
+    """Run the plan's fragment tasks through ``fmt.execute_task`` with at
+    most ``max_inflight`` in flight, issuing new work only as finished
+    work is consumed (backpressure) and per-OSD pressure bounded by one
+    shared AdmissionController.
+
+    Yields (task, Table | AggState) in completion order.  For scan plans
+    with a limit, the live row budget stops issuance the moment it is
+    met and cancels still-queued tasks — fragments past the budget are
+    never scanned."""
+    ds = plan.dataset
+    admission = AdmissionController(ds.fs.store, queue_depth)
+    lock = threading.Lock()
+    remaining = plan.limit if plan.kind == "scan" else None
+
+    def run(task: FragmentTask):
+        out, rec = fmt.execute_task(ds.fs, task, admission=admission)
+        with lock:
+            metrics.tasks.append(rec)
+        return task, out
+
+    t0 = time.perf_counter()
+    try:
+        tasks = plan.tasks
+        if max_inflight <= 1 or len(tasks) <= 1:
+            for task in tasks:
+                if remaining is not None:
+                    if remaining <= 0:
+                        return
+                    task.limit = remaining
+                task, out = run(task)
+                if remaining is not None:
+                    remaining -= len(out)
+                yield task, out
+            return
+        it = iter(tasks)
+
+        def submit(pool, task):
+            if remaining is not None:
+                task.limit = remaining
+            return pool.submit(run, task)
+
+        with ThreadPoolExecutor(max_workers=max_inflight) as pool:
+            pending = {
+                submit(pool, t) for t in islice(it, max_inflight)
+            }
+            try:
+                while pending:
+                    done, pending = wait(
+                        pending, return_when=FIRST_COMPLETED
+                    )
+                    for fut in done:
+                        task, out = fut.result()
+                        if remaining is not None:
+                            remaining -= len(out)
+                        if remaining is None or remaining > 0:
+                            nxt = next(it, None)
+                            if nxt is not None:
+                                pending.add(submit(pool, nxt))
+                        yield task, out
+                        if remaining is not None and remaining <= 0:
+                            return  # budget met: cancel queued work
+            finally:
+                for fut in pending:  # consumer stopped early / budget met
+                    fut.cancel()
+    finally:
+        metrics.wall_s = time.perf_counter() - t0
+        metrics.admission = admission.stats()
+
+
+def empty_table(schema, columns: Sequence[str] | None) -> Table:
+    names = list(columns) if columns is not None else schema.names
+    sch = schema.select(names)
+    return Table(
+        sch,
+        [
+            Column(
+                f,
+                np.empty(0, object if f.type == "string" else f.numpy_dtype),
+            )
+            for f in sch
+        ],
+    )
+
+
+# ---------------------------------------------------------------------------
+# The Query builder
+# ---------------------------------------------------------------------------
+
+
+class Query:
+    """Lazy, composable query over a Dataset.
+
+    Builder verbs (``select`` / ``filter`` / ``limit`` / ``aggregate`` /
+    ``count``) only grow the logical plan; nothing touches storage until
+    ``to_table`` / ``to_batches`` / ``to_scalar`` runs it through the
+    optimizer and the shared streaming executor.  ``explain()`` shows
+    what would run.  ``metrics`` holds the last execution's ScanMetrics
+    (each run gets a fresh snapshot)."""
+
+    def __init__(
+        self,
+        ds,
+        *,
+        format="pushdown",
+        num_threads: int = 16,
+        queue_depth: int = 4,
+        _root: PlanNode | None = None,
+        _scalar: bool = False,
+    ):
+        self.ds = ds
+        self.fmt = resolve_format(format)
+        self.num_threads = num_threads
+        self.queue_depth = queue_depth
+        self._root = _root if _root is not None else Scan(ds)
+        self._scalar = _scalar
+        self.metrics = ScanMetrics(discovery_bytes=ds.discovery_bytes)
+
+    # -- builder -----------------------------------------------------------
+    def _derive(self, root: PlanNode, *, scalar: bool | None = None):
+        q = Query.__new__(Query)
+        q.ds = self.ds
+        q.fmt = self.fmt
+        q.num_threads = self.num_threads
+        q.queue_depth = self.queue_depth
+        q._root = root
+        q._scalar = self._scalar if scalar is None else scalar
+        q.metrics = ScanMetrics(discovery_bytes=self.ds.discovery_bytes)
+        return q
+
+    @property
+    def _has_aggregate(self) -> bool:
+        return any(
+            isinstance(n, (Aggregate, Count)) for n in _walk(self._root)
+        )
+
+    def _require_relational(self, verb: str):
+        if self._has_aggregate:
+            raise ValueError(
+                f"{verb} cannot be applied after aggregate()/count()"
+            )
+
+    def _require_unlimited(self, verb: str):
+        # aggregating "any n rows" has no well-defined answer here: the
+        # executor would have to fold a nondeterministic subset.  Refuse
+        # rather than silently aggregate the whole input.  (limit() on
+        # top of an aggregate — trimming the finalized group rows — is
+        # fine and stays supported.)
+        if any(isinstance(n, Limit) for n in _walk(self._root)):
+            raise ValueError(f"{verb} over a limit()ed input is not supported")
+
+    def select(self, *columns) -> "Query":
+        """Project the output to ``columns`` (names; the last select
+        wins).  Accepts either ``select("a", "b")`` or a single
+        list/tuple."""
+        self._require_relational("select()")
+        if len(columns) == 1 and isinstance(columns[0], (list, tuple)):
+            columns = tuple(columns[0])
+        if not columns:
+            raise ValueError("select() needs at least one column")
+        for c in columns:
+            if not isinstance(c, str):
+                raise TypeError(
+                    f"select() takes column names, got {type(c).__name__}"
+                )
+            self.ds.schema.field(c)  # validate early
+        return self._derive(Project(self._root, tuple(columns)))
+
+    def filter(self, predicate: Expr) -> "Query":
+        """Keep rows matching ``predicate``; chained filters AND."""
+        self._require_relational("filter()")
+        if not isinstance(predicate, Expr):
+            raise TypeError("filter() takes an Expr predicate")
+        return self._derive(Filter(self._root, predicate))
+
+    def limit(self, n: int) -> "Query":
+        """At most ``n`` rows (any n rows: fragment completion order is
+        nondeterministic, like SQL LIMIT without ORDER BY)."""
+        if not isinstance(n, int) or n <= 0:
+            raise ValueError(f"limit must be a positive int, got {n!r}")
+        return self._derive(Limit(self._root, n))
+
+    def aggregate(
+        self,
+        aggs,
+        *,
+        group_by: str | None = None,
+        max_groups: int = DEFAULT_MAX_GROUPS,
+    ) -> "Query":
+        """SUM/MIN/MAX/MEAN/COUNT, optionally GROUP BY one key column."""
+        self._require_relational("aggregate()")
+        self._require_unlimited("aggregate()")
+        specs = parse_aggs(aggs)
+        if not specs:
+            raise ValueError("aggregate() needs at least one aggregate")
+        for s in specs:
+            if s.column is not None:
+                self.ds.schema.field(s.column)
+        if group_by is not None:
+            self.ds.schema.field(group_by)
+        return self._derive(
+            Aggregate(self._root, tuple(specs), group_by, max_groups)
+        )
+
+    def count(self) -> "Query":
+        """COUNT(*): a scalar query (``to_scalar`` returns the int)."""
+        self._require_relational("count()")
+        self._require_unlimited("count()")
+        return self._derive(Count(self._root), scalar=True)
+
+    # -- plan access -------------------------------------------------------
+    def logical_plan(self) -> PlanNode:
+        return self._root
+
+    def physical_plan(self) -> PhysicalPlan:
+        """Optimize + lower (no execution)."""
+        return lower(_copy_plan(self._root))
+
+    # -- execution ---------------------------------------------------------
+    def _begin(self, plan: PhysicalPlan) -> ScanMetrics:
+        """Fresh per-execution metrics snapshot; ``self.metrics`` always
+        refers to the latest run."""
+        m = ScanMetrics(
+            discovery_bytes=self.ds.discovery_bytes,
+            fragments_total=plan.fragments_total,
+            fragments_pruned=plan.fragments_pruned,
+            metadata_answers=plan.metadata_answers,
+        )
+        self.metrics = m
+        return m
+
+    def to_batches(
+        self, *, max_inflight: int | None = None
+    ) -> Iterator[Table]:
+        """Stream per-fragment Tables in completion order under the row
+        budget; empty fragments are skipped."""
+        plan = lower(_copy_plan(self._root))
+        if plan.kind != "scan":
+            raise ValueError(
+                "to_batches() streams scans; aggregate queries "
+                "materialize via to_table()"
+            )
+        metrics = self._begin(plan)
+        remaining = plan.limit
+
+        def gen():
+            nonlocal remaining
+            for _task, tbl in stream_tasks(
+                plan,
+                self.fmt,
+                metrics,
+                max_inflight=max_inflight or self.num_threads,
+                queue_depth=self.queue_depth,
+            ):
+                if remaining is not None:
+                    tbl = tbl.head(remaining)
+                    remaining -= len(tbl)
+                if len(tbl):
+                    metrics.rows += len(tbl)
+                    yield tbl
+
+        return gen()
+
+    def to_table(self) -> Table:
+        """Materialize the result (scan plans reassemble fragments in
+        plan order; aggregates finalize the merged partial state)."""
+        plan = lower(_copy_plan(self._root))
+        metrics = self._begin(plan)
+        if plan.kind == "aggregate":
+            state = plan.metadata_state
+            for _task, part in stream_tasks(
+                plan,
+                self.fmt,
+                metrics,
+                max_inflight=self.num_threads,
+                queue_depth=self.queue_depth,
+            ):
+                state.merge(part)  # completion order
+            metrics.rows = state.rows
+            out = state.finalize(self.ds.schema)
+            if plan.limit is not None:
+                out = out.head(plan.limit)
+            return out
+        parts = sorted(
+            stream_tasks(
+                plan,
+                self.fmt,
+                metrics,
+                max_inflight=self.num_threads,
+                queue_depth=self.queue_depth,
+            ),
+            key=lambda p: p[0].index,
+        )
+        tables = [t for _, t in parts if len(t)]
+        result = (
+            Table.concat(tables)
+            if tables
+            else empty_table(self.ds.schema, plan.columns)
+        )
+        if plan.limit is not None:
+            result = result.head(plan.limit)
+        metrics.rows = len(result)
+        return result
+
+    def to_scalar(self):
+        """Run a single-cell query (e.g. ``count()``) to its scalar."""
+        out = self.to_table()
+        if len(out) != 1 or len(out.schema) != 1:
+            raise ValueError(
+                f"to_scalar() needs a 1x1 result, got "
+                f"{len(out)}x{len(out.schema)}"
+            )
+        v = out.columns[0].values[0]
+        return v.item() if isinstance(v, np.generic) else v
+
+    # -- explain -----------------------------------------------------------
+    def explain(self, *, max_fragments: int = 12) -> str:
+        """Render the logical plan, the optimizer passes, and the lowered
+        physical tasks with per-fragment placement/cache/hedge state."""
+        lines = ["== logical plan =="]
+        lines += render_plan(self._root)
+        plan = lower(_copy_plan(self._root))
+        lines.append("== optimizer ==")
+        lines += [f"- {p}" for p in plan.passes]
+        lines.append("== physical plan ==")
+        budget = (
+            f", row_budget={plan.limit}" if plan.limit is not None else ""
+        )
+        lines.append(
+            f"executor: streaming, format={self.fmt.name}, "
+            f"max_inflight={self.num_threads}, "
+            f"queue_depth={self.queue_depth}/OSD{budget}"
+        )
+        lines.append(
+            f"fragments: {plan.fragments_total} total, "
+            f"{plan.fragments_pruned} pruned, "
+            f"{plan.metadata_answers} metadata-answered, "
+            f"{len(plan.tasks)} tasks"
+        )
+        shown = 0
+        for task in plan.tasks:
+            if shown >= max_fragments:
+                lines.append(f"  ... (+{len(plan.tasks) - shown} more tasks)")
+                break
+            frag = task.fragment
+            where = self.fmt.explain_task(self.ds.fs, task)
+            lim = f" limit<={task.limit}" if task.limit is not None else ""
+            lines.append(
+                f"  [{task.index}] {task.kind} {frag.path}#{frag.obj_idx} "
+                f"rows={frag.num_rows} pred={render_expr(task.predicate)}"
+                f"{lim} | {where}"
+            )
+            shown += 1
+        return "\n".join(lines)
+
+
+def _copy_plan(root: PlanNode) -> PlanNode:
+    """Executions must not mutate the builder's logical plan (passes
+    annotate Scan nodes, the executor refreshes task limits)."""
+    if isinstance(root, Scan):
+        return Scan(root.dataset, root.columns)
+    kids = root.children()
+    clone = dataclasses.replace(root)
+    if kids:
+        clone.input = _copy_plan(kids[0])  # type: ignore[attr-defined]
+    return clone

@@ -72,6 +72,7 @@ from repro.aformat.aggregate import (AggState, DEFAULT_MAX_GROUPS,
 from repro.aformat.expressions import Expr
 from repro.aformat.table import Table
 from repro.dataset.format import (ParquetFormat, TaskRecord, agg_payload,
+                                  count_state, is_degenerate_count,
                                   parse_agg_reply, scan_payload)
 from repro.dataset.fragment import Fragment
 from repro.storage.cephfs import CephFS, DirectObjectAccess
@@ -152,6 +153,12 @@ class ResultCache:
                 _, ev = self._od.popitem(last=False)
                 self._bytes -= len(ev)
                 self.evictions += 1
+
+    def contains(self, key: tuple) -> bool:
+        """Membership probe that neither recences the entry nor perturbs
+        the hit/miss counters — ``explain()`` uses it."""
+        with self._lock:
+            return key in self._od
 
     def __len__(self):
         return len(self._od)
@@ -285,7 +292,8 @@ class ScanScheduler:
 
     # -- cache keys -------------------------------------------------------------
     def cache_key(self, frag: Fragment, columns: Sequence[str] | None,
-                  predicate: Expr | None) -> tuple:
+                  predicate: Expr | None,
+                  limit: int | None = None) -> tuple:
         name = self._object_name(frag)
         version = self.store.version_of(name)
         footer_hash = ""
@@ -295,20 +303,32 @@ class ScanScheduler:
         cols = tuple(columns) if columns is not None else None
         pred_json = json.dumps(predicate.to_json(), sort_keys=True) \
             if predicate is not None else ""
+        # limit is part of the identity: a truncated result must never be
+        # served to an unbounded scan (or to a larger budget)
         return (name, version, footer_hash, frag.rg_in_object, cols,
-                pred_json)
+                pred_json, limit)
+
+    def agg_cache_key(self, frag: Fragment, specs, group_by,
+                      max_groups: int, predicate: Expr | None) -> tuple:
+        spec_key = ("__agg__",
+                    json.dumps([s.to_json() for s in specs]
+                               + [group_by, max_groups], sort_keys=True))
+        return self.cache_key(frag, spec_key, predicate)
 
     # -- the scan ---------------------------------------------------------------
     def scan_fragment(self, frag: Fragment,
                       columns: Sequence[str] | None,
                       predicate: Expr | None,
-                      admission=None) -> tuple[Table, TaskRecord]:
+                      admission=None,
+                      limit: int | None = None) -> tuple[Table, TaskRecord]:
         """Cache lookup -> placement decision -> (hedged) execution.
 
         Returns the same (Table, TaskRecord) contract as a FileFormat, so
         ``AdaptiveFormat`` is a drop-in placement.  ``admission`` bounds
-        in-flight work per OSD; a cache hit never takes a slot."""
-        key = self.cache_key(frag, columns, predicate)
+        in-flight work per OSD; a cache hit never takes a slot.
+        ``limit`` rides into ``scan_op`` (the node stops decoding at the
+        budget) and keys the result cache."""
+        key = self.cache_key(frag, columns, predicate, limit)
         ipc = self.cache.get(key)
         if ipc is not None:
             t0 = time.perf_counter()
@@ -325,16 +345,17 @@ class ScanScheduler:
             if est.where == "osd":
                 try:
                     tbl, rec, ipc = self._scan_osd(frag, columns,
-                                                   predicate, est)
+                                                   predicate, est, limit)
                 except (OSDDownError, ObjectNotFound):
                     # storage path unavailable (e.g. every replica died
                     # after the estimate): client-side reads via failover
                     with self._lock:
                         self.fallbacks += 1
                     tbl, rec, ipc = self._scan_client(frag, columns,
-                                                      predicate)
+                                                      predicate, limit)
             else:
-                tbl, rec, ipc = self._scan_client(frag, columns, predicate)
+                tbl, rec, ipc = self._scan_client(frag, columns, predicate,
+                                                  limit)
         self.cache.put(key, ipc)
         return tbl, rec
 
@@ -343,8 +364,8 @@ class ScanScheduler:
             return contextlib.nullcontext()
         return admission.admit_object(self._object_name(frag))
 
-    def _scan_osd(self, frag, columns, predicate, est):
-        payload = scan_payload(frag, columns, predicate)
+    def _scan_osd(self, frag, columns, predicate, est, limit=None):
+        payload = scan_payload(frag, columns, predicate, limit)
         deadline = self._hedge_deadline(est.in_bytes)
         if deadline is None:
             result, osd_id, el = self.doa.call(frag.path, frag.obj_idx,
@@ -362,30 +383,41 @@ class ScanScheduler:
             self.decisions["osd"] += 1
             if hedged:
                 self.hedges += 1
-            self._osd_lat.append(el / max(1, est.in_bytes))
+            if limit is None:
+                self._osd_lat.append(el / max(1, est.in_bytes))
         # el is straggle-inflated; divide it out so the decode-rate
-        # estimate stays a property of the data, not of the slow node
-        self._observe(est.in_bytes, el / max(sf, 1e-9), len(result))
+        # estimate stays a property of the data, not of the slow node.
+        # limit-truncated scans skip the estimators: their early-exit
+        # decode time and clipped output would teach the EWMAs that
+        # fragments are cheaper/smaller than they are.
+        if limit is None:
+            self._observe(est.in_bytes, el / max(sf, 1e-9), len(result))
         rec = TaskRecord("osd", osd_id, el, len(result), client_cpu,
                          len(tbl), hedged=hedged)
         return tbl, rec, result
 
-    def _scan_client(self, frag, columns, predicate):
+    def _scan_client(self, frag, columns, predicate, limit=None):
         tbl, rec = self._client_fmt.scan_fragment(self.fs, frag, columns,
-                                                  predicate)
+                                                  predicate, limit=limit)
         ipc = tbl.to_ipc()
         with self._lock:
             self.decisions["client"] += 1
         # both paths feed the estimators in the *same units*: stored
         # fragment bytes in, Arrow-IPC bytes out (the storage node runs
         # the same decode code, so observations must be interchangeable —
-        # wire bytes / raw nbytes would skew the shared EWMAs)
-        self._observe(self._frag_bytes(frag), rec.cpu_s, len(ipc))
+        # wire bytes / raw nbytes would skew the shared EWMAs); truncated
+        # scans are excluded for the same reason as in _scan_osd
+        if limit is None:
+            self._observe(self._frag_bytes(frag), rec.cpu_s, len(ipc))
         return tbl, rec, ipc
 
     # -- aggregate pushdown -----------------------------------------------------
     _ROWCOUNT_COLS = ("__rowcount__",)   # cache-key column sentinel: a
                                          # count shares nothing with a scan
+
+    def count_cache_key(self, frag: Fragment,
+                        predicate: Expr | None) -> tuple:
+        return self.cache_key(frag, self._ROWCOUNT_COLS, predicate)
 
     def count_fragment(self, frag: Fragment, predicate: Expr | None,
                        admission=None) -> tuple[int, TaskRecord]:
@@ -398,7 +430,7 @@ class ScanScheduler:
         if predicate is None:       # metadata answers; no I/O at all
             return frag.num_rows, TaskRecord("client", -1, 0.0, 0, 0.0,
                                              frag.num_rows, cached=True)
-        key = self.cache_key(frag, self._ROWCOUNT_COLS, predicate)
+        key = self.count_cache_key(frag, predicate)
         cached = self.cache.get(key)
         if cached is not None:
             n = int(json.loads(cached)["rows"])
@@ -461,10 +493,15 @@ class ScanScheduler:
         unless storage is badly saturated), hedged past the straggler
         deadline, and result-cached under the version-keyed LRU keyed by
         the aggregate spec.  Returns (AggState, TaskRecord)."""
-        spec_key = ("__agg__",
-                    json.dumps([s.to_json() for s in specs]
-                               + [group_by, max_groups], sort_keys=True))
-        key = self.cache_key(frag, spec_key, predicate)
+        if is_degenerate_count(specs, group_by):
+            # the unified executor lowers count_rows to this degenerate
+            # aggregate; keep the integer-on-the-wire rowcount machinery
+            # (placement-priced, hedged, result-cached)
+            n, rec = self.count_fragment(frag, predicate,
+                                         admission=admission)
+            return count_state(n), rec
+        key = self.agg_cache_key(frag, specs, group_by, max_groups,
+                                 predicate)
         cached = self.cache.get(key)
         if cached is not None:
             state = AggState.deserialize(cached)

@@ -52,12 +52,14 @@ def prompt_lengths(ds: Dataset, *, format="adaptive",
     columns, this ships only per-uid partial counts (``agg_op``), so an
     admission planner can size batches / padding before paying for a
     single token byte.  Returns ({uid: n_tokens}, ScanMetrics)."""
-    sc = ds.scanner(format=format, predicate=predicate,
-                    num_threads=num_threads)
-    out = sc.aggregate([("count", pos_col)], group_by=uid_col)
+    q = ds.query(format=format, num_threads=num_threads)
+    if predicate is not None:
+        q = q.filter(predicate)
+    q = q.aggregate([("count", pos_col)], group_by=uid_col)
+    out = q.to_table()
     uids = out.column(uid_col).values
     counts = out.column(f"count_{pos_col}").values
-    return {int(u): int(n) for u, n in zip(uids, counts)}, sc.metrics
+    return {int(u): int(n) for u, n in zip(uids, counts)}, q.metrics
 
 
 def ingest_prompts(ds: Dataset, *, format="adaptive",
@@ -74,18 +76,20 @@ def ingest_prompts(ds: Dataset, *, format="adaptive",
     hit its result cache — the "adaptive" string builds a fresh scheduler
     per call, which routes adaptively but cannot cache across calls.
 
-    The scan *streams* through ``Scanner.to_batches`` — fragments are
-    grouped into per-uid buffers as they land, so peak memory is the
-    grouped output plus O(in-flight fragments), never a materialized
-    whole-dataset Table.  Returns (requests, scan_metrics).
+    The scan *streams* through the lazy query plan's ``to_batches`` —
+    fragments are grouped into per-uid buffers as they land, so peak
+    memory is the grouped output plus O(in-flight fragments), never a
+    materialized whole-dataset Table.  Returns (requests, scan_metrics).
     """
-    sc = ds.scanner(format=format, columns=[uid_col, pos_col, token_col],
-                    predicate=predicate, num_threads=num_threads)
+    q = ds.query(format=format, num_threads=num_threads)
+    if predicate is not None:
+        q = q.filter(predicate)
+    q = q.select(uid_col, pos_col, token_col)
     # per-uid accumulation, one batch at a time: each fragment is grouped
     # (sort by (uid, pos), split at uid boundaries) and immediately folded
     # into its uid's buffer list
     groups: dict[int, list[tuple[np.ndarray, np.ndarray]]] = {}
-    for tbl in sc.to_batches():
+    for tbl in q.to_batches():
         uids = tbl.column(uid_col).values
         pos = tbl.column(pos_col).values
         toks = tbl.column(token_col).values
@@ -106,7 +110,7 @@ def ingest_prompts(ds: Dataset, *, format="adaptive",
         toks = np.concatenate([t for _, t in parts])
         reqs.append(Request(uid, toks[np.argsort(pos, kind="stable")],
                             max_new_tokens=max_new_tokens, eos_id=eos_id))
-    return reqs, sc.metrics
+    return reqs, q.metrics
 
 
 class ServeEngine:

@@ -70,20 +70,29 @@ def scan_op(obj: ObjectHandle, payload: dict) -> bytes:
     """Scan a self-contained ARW1 object: decode + filter + project.
 
     payload: {"columns": [...]|None, "predicate": expr-json|None,
+              "limit": int|None (row budget: stop decoding row groups once
+              met, ship at most that many rows — limit pushdown),
               "footer": serialized FileMeta|None (striped layout passes the
               parent footer; split layout objects carry their own)}
     """
     meta = _payload_footer(obj, payload)
     predicate = Expr.from_json(payload.get("predicate"))
     columns = payload.get("columns")
+    limit = payload.get("limit")
     row_groups = payload.get("row_groups")  # indices within this object
     metas = (meta.row_groups if row_groups is None
              else [meta.row_groups[i] for i in row_groups])
     parts = []
+    rows = 0
     for rg in metas:
-        parts.append(parquet.scan_row_group(obj, meta, rg, columns,
-                                            predicate))
+        part = parquet.scan_row_group(obj, meta, rg, columns, predicate)
+        parts.append(part)
+        rows += len(part)
+        if limit is not None and rows >= limit:
+            break                       # budget met: skip later row groups
     table = Table.concat(parts) if parts else None
+    if table is not None and limit is not None:
+        table = table.head(limit)       # ship only the budgeted rows
     if table is None:
         sel = columns or meta.schema.names
         import numpy as np
