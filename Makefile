@@ -4,7 +4,8 @@ PYTHON ?= python
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-fast lint bench bench-adaptive bench-aggregate \
-	bench-fig5 bench-fig6 bench-hedged bench-limit bench-smoke deps
+	bench-compact bench-fig5 bench-fig6 bench-hedged bench-limit \
+	bench-smoke deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -30,10 +31,13 @@ bench-smoke:
 	$(PYTHON) benchmarks/bench_smoke.py
 
 bench: bench-fig5 bench-fig6 bench-adaptive bench-hedged bench-aggregate \
-	bench-limit
+	bench-limit bench-compact
 
 bench-aggregate:
 	$(PYTHON) benchmarks/aggregate_pushdown.py
+
+bench-compact:
+	$(PYTHON) benchmarks/compaction.py
 
 bench-limit:
 	$(PYTHON) benchmarks/limit_pushdown.py

@@ -76,11 +76,24 @@ def run_limit_pushdown_small() -> dict:
     return out
 
 
+def run_compaction_small() -> dict:
+    from benchmarks import compaction
+    compaction.APPENDS = 24
+    compaction.ROWS_PER_APPEND = 800
+    t0 = time.perf_counter()
+    out = compaction.run()
+    out["wall_s"] = time.perf_counter() - t0
+    out["claims"] = compaction.check_claims(out)
+    out["small_config"] = True
+    return out
+
+
 BENCHES = {
     "hedged_straggler": run_hedged_straggler,
     "adaptive_scan": run_adaptive_scan_small,
     "aggregate_pushdown": run_aggregate_pushdown_small,
     "limit_pushdown": run_limit_pushdown_small,
+    "compaction": run_compaction_small,
 }
 
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (adaptive_scan, fig5_latency_scaling,
+from benchmarks import (adaptive_scan, compaction, fig5_latency_scaling,
                         fig6_cpu_utilization, ingest_train, kernel_bench,
                         layout_compare)
 
@@ -22,6 +22,7 @@ BENCHES = {
     "kernels": kernel_bench.main,
     "ingest": ingest_train.main,
     "adaptive": adaptive_scan.main,
+    "compaction": compaction.main,
 }
 
 

@@ -21,7 +21,8 @@ and benchmarks.
 
 from __future__ import annotations
 
-from repro.dataset import (AdaptiveFormat, AggSpec, Dataset, ParquetFormat,
+from repro.dataset import (AdaptiveFormat, AggSpec, CommitConflict, Dataset,
+                           MutableDataset, ParquetFormat,
                            PushdownParquetFormat, Query, ScanScheduler,
                            Scanner, dataset)
 from repro.storage.cephfs import CephFS, DirectObjectAccess
@@ -39,8 +40,9 @@ def make_cluster(num_osds: int = 8, *, replication: int = 3,
     return CephFS(store)
 
 
-__all__ = ["AggSpec", "Dataset", "ParquetFormat", "PushdownParquetFormat",
-           "AdaptiveFormat", "Query", "ScanScheduler", "Scanner", "dataset",
-           "CephFS", "DirectObjectAccess", "write_flat", "write_split",
+__all__ = ["AggSpec", "Dataset", "MutableDataset", "CommitConflict",
+           "ParquetFormat", "PushdownParquetFormat", "AdaptiveFormat",
+           "Query", "ScanScheduler", "Scanner", "dataset", "CephFS",
+           "DirectObjectAccess", "write_flat", "write_split",
            "write_striped", "register_default_classes", "ObjectStore",
            "make_cluster"]

@@ -10,6 +10,8 @@ from repro.dataset.plan import (Aggregate, Count, Filter, FragmentTask,
                                 Query, Scan, ScanMetrics)
 from repro.dataset.scheduler import (ResultCache, ScanScheduler,
                                      modeled_latency)
+from repro.dataset.snapshot import (CommitConflict, CompactionReport,
+                                    Manifest, MutableDataset)
 
 __all__ = ["AdmissionController", "AggSpec", "Dataset", "ScanMetrics",
            "Scanner", "dataset", "FileFormat", "ParquetFormat",
@@ -17,4 +19,5 @@ __all__ = ["AdmissionController", "AggSpec", "Dataset", "ScanMetrics",
            "Fragment", "ResultCache", "ScanScheduler", "modeled_latency",
            "Query", "PlanNode", "Scan", "Filter", "Project", "Aggregate",
            "Limit", "Count", "FragmentTask", "PhysicalPlan",
-           "resolve_format"]
+           "resolve_format", "MutableDataset", "Manifest",
+           "CommitConflict", "CompactionReport"]

@@ -96,9 +96,23 @@ def _footer_tail_bytes(fs: CephFS, path: str) -> tuple[parquet.FileMeta, int]:
 def dataset(fs: CephFS, prefix: str, layout: str = "auto") -> Dataset:
     """Discover a dataset under ``prefix``.
 
-    auto: split if ``.index`` files exist, else striped if the files carry
-    the striped xattr, else flat.
+    A prefix that carries a snapshot log (``MutableDataset.create`` /
+    ``append``) is discovered through its *manifest*, not by re-listing
+    the prefix: one HEAD read materializes the current snapshot with
+    every footer embedded — exact under concurrent appends, and
+    uncommitted or retired data files are invisible.
+
+    Otherwise: auto = split if ``.index`` files exist, else striped if
+    the files carry the striped xattr, else flat.
     """
+    if layout in ("auto", "mutable"):
+        from repro.dataset import snapshot as snapshot_mod
+
+        if snapshot_mod.is_mutable(fs, prefix):
+            return snapshot_mod.MutableDataset.open(fs, prefix).as_of()
+        if layout == "mutable":
+            raise FileNotFoundError(
+                f"no mutable dataset (snapshot log) at {prefix!r}")
     paths = fs.listdir(prefix)
     if not paths:
         raise FileNotFoundError(f"no files under {prefix!r}")

@@ -13,6 +13,7 @@ import dataclasses
 from typing import Any, Mapping
 
 from repro.aformat import parquet
+from repro.aformat.expressions import Expr
 from repro.aformat.statistics import ColumnStats
 
 
@@ -41,6 +42,13 @@ class Fragment:
     # client-scan path: where the row group lives inside `path`
     client_meta: parquet.FileMeta | None = None
     client_rg_index: int = 0
+    # snapshot layer (repro.dataset.snapshot): rows matching this
+    # predicate are deleted in the fragment's snapshot; the optimizer
+    # conjoins NOT(tombstone) into the fragment's residual predicate so
+    # deleted rows never resurface at any placement.  num_rows/stats
+    # stay the *physical* (pre-delete) values — correct for pruning,
+    # excluded from metadata-only answers while a tombstone is live.
+    tombstone: Expr | None = None
 
     def describe(self) -> dict[str, Any]:
         return {"path": self.path, "obj_idx": self.obj_idx,

@@ -262,6 +262,12 @@ def pushdown_projection(
     ``scan_row_group`` itself); for an aggregate, exactly the columns the
     aggregate kernel references.  Returns (columns, explain note)."""
     if spec.aggregate is not None:
+        if schema is None or len(schema) == 0:
+            # an empty dataset (e.g. a mutable dataset before its first
+            # append) has no columns to decode — and no tasks to decode
+            # them in; only schema-free aggregates (COUNT(*)) get here,
+            # the builder rejects column-referencing ones up front
+            return None, "empty dataset: nothing to decode"
         cols = tuple(
             needed_columns(
                 list(spec.aggregate.specs),
@@ -289,11 +295,34 @@ def prune_fragments(
     fragments: Sequence[Fragment], predicate: Expr | None
 ) -> tuple[list[tuple[Fragment, Expr | None]], list[FragmentDecision]]:
     """Footer-stats pruning: NONE-verdict fragments are dropped, ALL
-    verdicts drop the residual predicate (the fragment is taken whole)."""
+    verdicts drop the residual predicate (the fragment is taken whole).
+
+    Snapshot tombstones (``Fragment.tombstone``) are folded in here —
+    the one choke point every verb and placement lowers through: a
+    fragment whose stats prove the tombstone deletes *every* row is
+    dropped; one whose stats prove it deletes *none* scans clean; the
+    rest carry ``NOT(tombstone)`` conjoined into their residual
+    predicate, so deleted rows are filtered at whatever placement runs
+    the scan.  Fragment stats are physical (pre-delete), which keeps
+    both verdicts exact: NONE/ALL over a superset of the live rows still
+    hold for the live rows.
+    """
     survivors: list[tuple[Fragment, Expr | None]] = []
     decisions: list[FragmentDecision] = []
     for frag in fragments:
         pred = predicate
+        tomb = frag.tombstone
+        if tomb is not None and frag.stats:
+            verdict = tomb.prune(frag.stats)
+            if verdict == NONE:
+                tomb = None  # stats prove no deleted rows live here
+            elif verdict == ALL:
+                decisions.append(
+                    FragmentDecision(
+                        frag, "pruned", "tombstone deletes every row"
+                    )
+                )
+                continue
         if pred is not None and frag.stats:
             verdict = pred.prune(frag.stats)
             if verdict == NONE:
@@ -303,6 +332,9 @@ def prune_fragments(
                 continue
             if verdict == ALL:
                 pred = None
+        if tomb is not None:
+            anti = Not(tomb)
+            pred = anti if pred is None else And(pred, anti)
         survivors.append((frag, pred))
     return survivors, decisions
 
@@ -668,6 +700,10 @@ def stream_tasks(
 
 
 def empty_table(schema, columns: Sequence[str] | None) -> Table:
+    if schema is None:  # e.g. a mutable dataset with no appends yet
+        from repro.aformat.schema import Schema
+
+        return Table(Schema(()), [])
     names = list(columns) if columns is not None else schema.names
     sch = schema.select(names)
     return Table(
@@ -757,6 +793,9 @@ class Query:
             columns = tuple(columns[0])
         if not columns:
             raise ValueError("select() needs at least one column")
+        if self.ds.schema is None:
+            raise ValueError("select() on a dataset with no schema "
+                             "(empty dataset)")
         for c in columns:
             if not isinstance(c, str):
                 raise TypeError(
@@ -792,6 +831,14 @@ class Query:
         specs = parse_aggs(aggs)
         if not specs:
             raise ValueError("aggregate() needs at least one aggregate")
+        refs_columns = group_by is not None or any(
+            s.column is not None for s in specs
+        )
+        if self.ds.schema is None and refs_columns:
+            raise ValueError(
+                "aggregate() referencing columns on a dataset with no "
+                "schema (empty dataset); only COUNT(*) is answerable"
+            )
         for s in specs:
             if s.column is not None:
                 self.ds.schema.field(s.column)

@@ -1,3 +1,19 @@
-from repro.serve.engine import Completion, Request, ServeEngine, init_serve_params
+from repro.serve.engine import (
+    Completion,
+    Request,
+    ServeEngine,
+    append_prompts,
+    ingest_prompts,
+    init_serve_params,
+    prompt_lengths,
+)
 
-__all__ = ["Completion", "Request", "ServeEngine", "init_serve_params"]
+__all__ = [
+    "Completion",
+    "Request",
+    "ServeEngine",
+    "append_prompts",
+    "ingest_prompts",
+    "init_serve_params",
+    "prompt_lengths",
+]

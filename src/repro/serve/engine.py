@@ -20,8 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.aformat.table import Table
 from repro.configs.base import ModelConfig
-from repro.dataset import AdaptiveFormat, Dataset
+from repro.dataset import AdaptiveFormat, Dataset, MutableDataset
 from repro.models import api as model_api
 from repro.models import lm
 from repro.sharding import ShardingCtx
@@ -44,15 +45,51 @@ class Completion:
     steps: int
 
 
-def prompt_lengths(ds: Dataset, *, format="adaptive",
+def _pin(ds):
+    """Snapshot-pin a mutable prompt store: resolve it to the immutable
+    Dataset of the snapshot current *now*, so one ingest never mixes rows
+    from two commits (writers appending mid-scan stay invisible)."""
+    return ds.as_of() if isinstance(ds, MutableDataset) else ds
+
+
+def append_prompts(store: MutableDataset, requests, *,
+                   uid_col: str = "uid", pos_col: str = "pos",
+                   token_col: str = "token") -> int:
+    """Append serving Requests to a columnar prompt store through the
+    transactional path: one row per prompt token (uid, pos, token), one
+    snapshot commit for the batch.  Readers pinned to earlier snapshots
+    never see the new prompts; the returned snapshot id replays exactly
+    this ingest boundary via ``store.as_of(sid)``.  Continuous ingest
+    produces many small appended files — ``store.compact()`` merges them
+    back into right-sized row groups on the storage nodes."""
+    if not requests:
+        raise ValueError("append_prompts() with no requests")
+    uids = np.concatenate([
+        np.full(len(r.prompt), r.uid, np.int64) for r in requests])
+    pos = np.concatenate([
+        np.arange(len(r.prompt), dtype=np.int32) for r in requests])
+    toks = np.concatenate([
+        np.asarray(r.prompt, np.int32) for r in requests])
+    tbl = Table.from_pydict({uid_col: uids, pos_col: pos,
+                             token_col: toks})
+    return store.append(tbl)
+
+
+def prompt_lengths(ds: "Dataset | MutableDataset", *, format="adaptive",
                    predicate=None, uid_col: str = "uid",
                    pos_col: str = "pos", num_threads: int = 8):
     """Per-uid prompt lengths via grouped COUNT pushdown — the wave
     planner's sizing query.  Where ``ingest_prompts`` must ship token
     columns, this ships only per-uid partial counts (``agg_op``), so an
     admission planner can size batches / padding before paying for a
-    single token byte.  Returns ({uid: n_tokens}, ScanMetrics)."""
-    q = ds.query(format=format, num_threads=num_threads)
+    single token byte.  A :class:`MutableDataset` is snapshot-pinned
+    first; an empty store (no prompts appended yet) sizes to zero waves.
+    Returns ({uid: n_tokens}, ScanMetrics)."""
+    pinned = _pin(ds)
+    if not pinned.fragments():       # nothing committed yet
+        from repro.dataset.plan import ScanMetrics
+        return {}, ScanMetrics()
+    q = pinned.query(format=format, num_threads=num_threads)
     if predicate is not None:
         q = q.filter(predicate)
     q = q.aggregate([("count", pos_col)], group_by=uid_col)
@@ -62,7 +99,7 @@ def prompt_lengths(ds: Dataset, *, format="adaptive",
     return {int(u): int(n) for u, n in zip(uids, counts)}, q.metrics
 
 
-def ingest_prompts(ds: Dataset, *, format="adaptive",
+def ingest_prompts(ds: "Dataset | MutableDataset", *, format="adaptive",
                    predicate=None, uid_col: str = "uid",
                    pos_col: str = "pos", token_col: str = "token",
                    max_new_tokens: int = 32, eos_id: int = -1,
@@ -79,9 +116,12 @@ def ingest_prompts(ds: Dataset, *, format="adaptive",
     The scan *streams* through the lazy query plan's ``to_batches`` —
     fragments are grouped into per-uid buffers as they land, so peak
     memory is the grouped output plus O(in-flight fragments), never a
-    materialized whole-dataset Table.  Returns (requests, scan_metrics).
+    materialized whole-dataset Table.  A :class:`MutableDataset` prompt
+    store is snapshot-pinned up front: prompts appended (or compacted)
+    while the stream runs are invisible to this ingest and land in the
+    next one.  Returns (requests, scan_metrics).
     """
-    q = ds.query(format=format, num_threads=num_threads)
+    q = _pin(ds).query(format=format, num_threads=num_threads)
     if predicate is not None:
         q = q.filter(predicate)
     q = q.select(uid_col, pos_col, token_col)

@@ -86,6 +86,31 @@ class CephFS:
         self._mds[path] = ino
         return ino
 
+    def reserve_ino(self) -> int:
+        """Allocate an inode number without installing a path yet — the
+        first half of a storage-side write: the client derives the target
+        object name (``f"{ino:x}.{idx:08x}"``) before any bytes exist,
+        hands it to an object-class method that writes the data inside
+        the cluster, then installs the path with :meth:`register_file`."""
+        return self._alloc_ino()
+
+    def register_file(self, path: str, ino_num: int, size: int,
+                      stripe_unit: int,
+                      xattrs: dict | None = None) -> Inode:
+        """Install MDS metadata for a file whose object bytes were
+        written inside the storage tier (``compact_op``) — a pure
+        metadata operation: no data bytes cross the client wire."""
+        if path in self._mds:
+            raise FileExistsError(path)
+        if size <= 0 or stripe_unit <= 0:
+            raise ValueError(f"register_file({path!r}): need positive "
+                             f"size/stripe_unit, got {size}/{stripe_unit}")
+        ino = Inode(ino_num, path, size, stripe_unit,
+                    max(1, -(-size // stripe_unit)), dict(xattrs or {}))
+        with self._lock:
+            self._mds[path] = ino
+        return ino
+
     def read_file(self, path: str) -> bytes:
         ino = self.stat(path)
         parts = []

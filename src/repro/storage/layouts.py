@@ -36,13 +36,32 @@ class StripedFile:
 
 def write_striped(fs: CephFS, path: str, table: Table, *,
                   row_group_rows: int = 65536,
-                  codec: str = compression.ZLIB) -> StripedFile:
+                  codec: str = compression.ZLIB,
+                  object_size: int | None = None) -> StripedFile:
     parts = list(parquet.iter_row_groups(table, row_group_rows))
     encoded = [parquet.encode_row_group(p, codec) for p in parts]
     raw_max = max(len(d) for d, _ in encoded)
     # stripe unit: padded row-group size, object-aligned; rg0 shares its
     # stripe with the leading magic.
     su = -(-(raw_max + len(parquet.MAGIC)) // ALIGN) * ALIGN
+    if object_size is not None:
+        # the "one row group per object" invariant is load-bearing for
+        # every pushdown path: an encoded group too big for its object
+        # would be split mid-chunk and unscannable storage-side.  Detect
+        # the bad knob combination at write time, loudly.
+        if object_size % ALIGN:
+            raise ValueError(
+                f"object_size={object_size} must be a multiple of the "
+                f"{ALIGN}-byte object alignment")
+        if su > object_size:
+            raise ValueError(
+                f"write_striped({path!r}): row_group_rows="
+                f"{row_group_rows} encodes a row group of {raw_max} "
+                f"bytes ({su} after magic+alignment), which cannot fit "
+                f"the requested object_size={object_size}; lower "
+                f"row_group_rows or raise object_size so every row "
+                f"group stays inside one object")
+        su = object_size
     out = bytearray(parquet.MAGIC)
     groups = []
     for i, (data, rg) in enumerate(encoded):
@@ -127,9 +146,19 @@ class SplitIndex:
 
 def write_split(fs: CephFS, path: str, table: Table, *,
                 row_group_rows: int = 65536,
-                codec: str = compression.ZLIB) -> str:
+                codec: str = compression.ZLIB,
+                object_size: int | None = None) -> str:
     """Writes R single-row-group files + ``<path>.index``; returns the
-    index path (dataset discovery finds only .index files, paper Fig. 4)."""
+    index path (dataset discovery finds only .index files, paper Fig. 4).
+
+    ``object_size``, when given, pins every split file's stripe unit; a
+    row group whose encoded file exceeds it is a hard error (the
+    row-group-within-one-object invariant that all pushdown relies on).
+    """
+    if object_size is not None and object_size % ALIGN:
+        raise ValueError(
+            f"object_size={object_size} must be a multiple of the "
+            f"{ALIGN}-byte object alignment")
     parts = list(parquet.iter_row_groups(table, row_group_rows))
     rg_files, rg_metas = [], []
     for i, part in enumerate(parts):
@@ -138,6 +167,16 @@ def write_split(fs: CephFS, path: str, table: Table, *,
         sub_path = f"{path}.rg{i:05d}.arw"
         # one object per split file: stripe unit >= file size, aligned
         su = max(ALIGN, -(-len(sub) // ALIGN) * ALIGN)
+        if object_size is not None:
+            if su > object_size:
+                raise ValueError(
+                    f"write_split({path!r}): row_group_rows="
+                    f"{row_group_rows} encodes row group {i} into "
+                    f"{len(sub)} bytes ({su} aligned), which cannot fit "
+                    f"the requested object_size={object_size}; lower "
+                    f"row_group_rows or raise object_size so every row "
+                    f"group stays inside one object")
+            su = object_size
         fs.write_file(sub_path, sub, stripe_unit=su,
                       xattrs={"layout": "split-part", "parent": path})
         rg_files.append(sub_path)
@@ -162,9 +201,12 @@ def read_split_index(fs: CephFS, index_path: str) -> SplitIndex:
 
 def write_flat(fs: CephFS, path: str, table: Table, *,
                row_group_rows: int = 65536,
-               codec: str = compression.ZLIB) -> None:
-    """Write ``table`` as one self-contained single-object ARW1 file."""
+               codec: str = compression.ZLIB) -> parquet.FileMeta:
+    """Write ``table`` as one self-contained single-object ARW1 file.
+    Returns the file's footer (the mutable-dataset append path embeds it
+    in the manifest so discovery never re-reads the file)."""
     data = parquet.write_table(table, row_group_rows=row_group_rows,
                                codec=codec)
     su = max(ALIGN, -(-len(data) // ALIGN) * ALIGN)
     fs.write_file(path, data, stripe_unit=su, xattrs={"layout": "flat"})
+    return parquet.read_footer(parquet.BytesSource(data))

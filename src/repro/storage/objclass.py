@@ -183,6 +183,69 @@ def rowcount_op(obj: ObjectHandle, payload: dict) -> bytes:
     return json.dumps({"rows": state.cells[0]}).encode()
 
 
+def compact_op(store: ObjectStore, obj: ObjectHandle,
+               payload: dict) -> bytes:
+    """Merge co-located small row groups into right-sized ones ON the
+    storage node (the mutable-dataset compaction offload).
+
+    payload: {"sources": [{"name": object-name, "keep": expr-json|None},
+                          ...],
+              "target": object name for the rewritten ARW1 file,
+              "row_group_rows": int, "codec": str}
+
+    Every source must be a self-contained ARW1 object held by THIS OSD
+    (co-located; the driver groups victims by holder).  The node decodes
+    each source (applying the per-source ``keep`` predicate, i.e.
+    NOT(tombstone), so deleted rows are physically dropped), concatenates,
+    re-encodes at ``row_group_rows`` — statistics are regenerated by the
+    encoder — and writes the new object back into the cluster directly
+    (``store.put``: an OSD-to-OSD transfer, not a client round-trip).
+
+    Only metadata returns to the client: ``{"ok": true, "rows": n,
+    "size": bytes, "footer": FileMeta json}``.  The raw row-group bytes
+    never cross the client wire in either direction.  A source this OSD
+    does not hold returns ``{"ok": false, "missing": [...]}`` — the
+    driver re-plans or falls back to a client-side rewrite.
+
+    Source bytes are read via :meth:`ObjectHandle.peek_all` (cluster-
+    internal traffic, like scrub/recovery): compaction must not inflate
+    the client-visible read counters."""
+    sources = payload["sources"]
+    missing = [s["name"] for s in sources
+               if not (s["name"] == obj.name
+                       or _peer_held(obj, s["name"]))]
+    if missing:
+        return json.dumps({"ok": False, "missing": missing}).encode()
+    parts = []
+    for s in sources:
+        handle = obj if s["name"] == obj.name else obj.open_peer(s["name"])
+        src = parquet.BytesSource(handle.peek_all())
+        meta = parquet.read_footer(src)
+        keep = Expr.from_json(s.get("keep"))
+        for rg in meta.row_groups:
+            parts.append(parquet.scan_row_group(src, meta, rg, None, keep))
+    merged = Table.concat(parts) if parts else None
+    rows = len(merged) if merged is not None else 0
+    if rows == 0:          # everything tombstoned: nothing to rewrite
+        return json.dumps({"ok": True, "rows": 0, "size": 0,
+                           "footer": None}).encode()
+    data = parquet.write_table(merged,
+                               row_group_rows=payload["row_group_rows"],
+                               codec=payload.get("codec", "zlib"))
+    store.put(payload["target"], data)
+    meta = parquet.read_footer(parquet.BytesSource(data))
+    return json.dumps({"ok": True, "rows": rows, "size": len(data),
+                       "footer": meta.to_json()}).encode()
+
+
+def _peer_held(obj: ObjectHandle, name: str) -> bool:
+    try:
+        obj.open_peer(name)
+        return True
+    except KeyError:
+        return False
+
+
 def checksum_op(obj: ObjectHandle, payload: dict) -> bytes:
     data = obj.read_all()
     return struct.pack("<I", zlib.crc32(data))
@@ -202,4 +265,8 @@ def register_default_classes(store: ObjectStore):
     store.register_cls("rowcount_op", rowcount_op)
     store.register_cls("checksum_op", checksum_op)
     store.register_cls("read_op", read_op)
+    # compact_op writes the rewritten object back into the cluster, so it
+    # closes over the store (the Ceph cls SDK's ioctx write-back analogue)
+    store.register_cls("compact_op",
+                       lambda obj, payload: compact_op(store, obj, payload))
     return store

@@ -41,6 +41,19 @@ class ObjectNotFound(KeyError):
     pass
 
 
+class VersionConflictError(RuntimeError):
+    """Optimistic-commit failure: the object's cluster version moved past
+    the version the writer read (``ObjectStore.put_if_version``)."""
+
+    def __init__(self, name: str, expected: int, actual: int):
+        super().__init__(
+            f"version conflict on {name!r}: expected {expected}, "
+            f"found {actual}")
+        self.name = name
+        self.expected = expected
+        self.actual = actual
+
+
 @dataclasses.dataclass
 class OSDStats:
     bytes_stored: int = 0
@@ -221,6 +234,8 @@ class ObjectStore:
         self.replication = min(replication, num_osds)
         self.pg_num = pg_num
         self._cls: dict[str, Callable] = {}
+        self._cas_lock = threading.Lock()   # serializes put_if_version —
+                                # the primary-OSD write-serialization point
 
     # -- placement -------------------------------------------------------------
     def pg_of(self, name: str) -> int:
@@ -273,15 +288,48 @@ class ObjectStore:
                 err = e
         raise err if err else ObjectNotFound(name)
 
-    def delete(self, name: str):
+    def delete(self, name: str) -> int:
+        """Delete the object from every reachable acting replica.  Returns
+        the number of replicas that actually dropped a copy; a down
+        replica keeps its (now-stale) copy and counters until
+        :meth:`recover_osd` reconciles it by version."""
+        dropped = 0
         for osd in self.acting_set(name):
             try:
+                held = osd.contains(name)
                 osd.delete(name)
+                dropped += held
             except OSDDownError:
                 pass
+        return dropped
 
     def exists(self, name: str) -> bool:
-        return any(o.contains(name) for o in self.acting_set(name))
+        """True if any *up* acting replica holds the object.  Down OSDs
+        are excluded: their object map is unreachable and may hold ghost
+        copies of objects deleted while they were down — membership must
+        reflect what the cluster can actually serve."""
+        return any(not o.down and o.contains(name)
+                   for o in self.acting_set(name))
+
+    def put_if_version(self, name: str, data: bytes,
+                       expected_version: int) -> int:
+        """Optimistic-concurrency write: install ``data`` only if the
+        object's cluster version (:meth:`version_of`) still equals
+        ``expected_version`` (0 = object must not exist yet).  The
+        check-and-write is serialized store-wide — the analogue of the
+        primary OSD ordering all writes to one object — so two writers
+        racing on the same head object cannot both win.  Returns the new
+        version; raises :class:`VersionConflictError` on a lost race.
+
+        This is the commit primitive of the snapshot/manifest layer
+        (``repro.dataset.snapshot``): read head @ v, prepare, commit iff
+        still @ v."""
+        with self._cas_lock:
+            actual = self.version_of(name)
+            if actual != expected_version:
+                raise VersionConflictError(name, expected_version, actual)
+            self.put(name, data)
+            return self.version_of(name)
 
     def version_of(self, name: str) -> int:
         """Cluster-wide object version: the max per-replica write counter.
@@ -456,3 +504,20 @@ class ObjectHandle:
 
     def read_all(self) -> bytes:
         return self._osd.get(self.name)
+
+    def open_peer(self, name: str) -> "ObjectHandle":
+        """Handle to another object co-located on this same OSD — the
+        mechanism ``compact_op`` uses to merge neighbouring small objects
+        without any bytes leaving the node.  Raises ObjectNotFound if
+        this OSD holds no copy (the caller planned a non-co-located
+        group and must fall back)."""
+        if not self._osd.contains(name):
+            raise ObjectNotFound(name)
+        return ObjectHandle(self._osd, name)
+
+    def peek_all(self) -> bytes:
+        """Whole-object read for cluster-internal maintenance traffic
+        (compaction, like scrub/recovery) — bypasses the client-visible
+        ``reads``/``bytes_read`` counters the Fig.-6 accounting replays
+        as client load."""
+        return self._osd.peek(self.name)

@@ -273,3 +273,155 @@ def test_flat_layout_single_object(fs, small_table):
     assert fs.stat("/f.arw").object_count == 1
     back = parquet.scan_file(FileSource(fs, "/f.arw"))
     assert back.equals(small_table)
+
+
+# ---------------------------------------------------------------------------
+# delete accounting, versioned CAS, peer access (mutable-dataset substrate)
+# ---------------------------------------------------------------------------
+
+
+def test_delete_keeps_stored_bytes_exact():
+    """Deleting an object must remove its bytes/objects from every up
+    replica's accounting (the capacity view maintenance and the Fig.-6
+    replay read)."""
+    store = ObjectStore(8, replication=3)
+    base = [(o.stats.bytes_stored, o.stats.objects) for o in store.osds]
+    store.put("victim", b"x" * 5000)
+    assert store.total_stats().bytes_stored == 3 * 5000
+    dropped = store.delete("victim")
+    assert dropped == 3
+    assert [(o.stats.bytes_stored, o.stats.objects)
+            for o in store.osds] == base
+    assert store.total_stats().bytes_stored == 0
+    assert not store.exists("victim")
+
+
+def test_delete_with_down_replica_heals_exactly():
+    """A replica that is down during the delete keeps counting the
+    object's bytes; it must never serve membership while down, and
+    recovery must settle its accounting to exact."""
+    store = ObjectStore(4, replication=3)
+    store.put("victim", b"y" * 4096)
+    acting = store.acting_set("victim")
+    down = acting[1]
+    store.fail_osd(down.osd_id)
+    store.delete("victim")
+    # the down replica still counts the bytes (it cannot know) ...
+    assert down.stats.bytes_stored == 4096
+    # ... but the cluster-facing views must not resurrect the object
+    assert not store.exists("victim")
+    assert "victim" not in store.list_objects()
+    # version advanced on the up replicas: any cache keyed on it is dead
+    assert store.version_of("victim") == 2
+    store.recover_osd(down.osd_id)
+    assert down.stats.bytes_stored == 0
+    assert down.stats.objects == 0
+    assert not down.contains("victim")
+    assert store.total_stats().bytes_stored == 0
+
+
+def test_put_if_version_optimistic_commit():
+    from repro.storage.objstore import VersionConflictError
+
+    store = ObjectStore(4, replication=3)
+    assert store.put_if_version("head", b"v1", 0) == 1
+    assert store.put_if_version("head", b"v2", 1) == 2
+    with pytest.raises(VersionConflictError) as ei:
+        store.put_if_version("head", b"stale", 1)
+    assert ei.value.expected == 1 and ei.value.actual == 2
+    assert store.get("head") == b"v2"
+    # create-if-absent semantics: expected 0 conflicts once it exists
+    with pytest.raises(VersionConflictError):
+        store.put_if_version("head", b"v3", 0)
+
+
+def test_object_handle_peer_access_counters():
+    """compact_op's reads are cluster-internal: open_peer + peek_all must
+    not inflate client-visible read counters, and a non-co-located peer
+    is a hard miss."""
+    from repro.storage.objstore import ObjectHandle
+
+    store = ObjectStore(8, replication=2)
+    store.put("a", b"alpha")
+    # find a peer object actually co-located with "a"
+    holder = store.acting_set("a")[0]
+    peer_name = None
+    for i in range(64):
+        cand = f"peer{i}"
+        if holder in store.acting_set(cand):
+            store.put(cand, b"beta")
+            peer_name = cand
+            break
+    assert peer_name is not None
+    h = ObjectHandle(holder, "a")
+    reads_before = holder.stats.reads
+    assert h.peek_all() == b"alpha"
+    assert h.open_peer(peer_name).peek_all() == b"beta"
+    assert holder.stats.reads == reads_before
+    with pytest.raises(ObjectNotFound):
+        h.open_peer("never-written")
+
+
+def test_compact_op_rejects_non_colocated_sources(fs, small_table):
+    """A compact_op naming a source the executing OSD does not hold must
+    refuse (the driver falls back), never crash or partially write."""
+    import json
+
+    layouts.write_flat(fs, "/one.arw", small_table.slice(0, 100),
+                       row_group_rows=100)
+    name = fs.object_names("/one.arw")[0]
+    payload = {"sources": [{"name": name, "keep": None},
+                           {"name": "not-an-object", "keep": None}],
+               "target": "t", "row_group_rows": 100}
+    raw, _osd, _el = fs.store.cls_call(name, "compact_op", payload)
+    reply = json.loads(raw)
+    assert reply == {"ok": False, "missing": ["not-an-object"]}
+    assert not fs.store.exists("t")
+
+
+# ---------------------------------------------------------------------------
+# layouts: the row-group-within-one-object knob validation
+# ---------------------------------------------------------------------------
+
+
+def test_write_striped_object_size_too_small_raises(fs, small_table):
+    with pytest.raises(ValueError) as ei:
+        layouts.write_striped(fs, "/s.arw", small_table,
+                              row_group_rows=2048, object_size=4096)
+    msg = str(ei.value)
+    assert "row_group_rows" in msg and "object_size" in msg
+
+
+def test_write_striped_object_size_respected(fs, small_table):
+    meta = layouts.write_striped(fs, "/s.arw", small_table,
+                                 row_group_rows=256,
+                                 object_size=64 * 4096)
+    assert meta.stripe_unit == 64 * 4096
+    footer = layouts.read_striped_footer(fs, "/s.arw")
+    back = parquet.scan_file(FileSource(fs, "/s.arw"), meta=footer)
+    assert back.equals(small_table)
+
+
+def test_write_striped_object_size_misaligned_raises(fs, small_table):
+    with pytest.raises(ValueError, match="alignment"):
+        layouts.write_striped(fs, "/s.arw", small_table,
+                              row_group_rows=256, object_size=5000)
+
+
+def test_write_split_object_size_too_small_raises(fs, small_table):
+    with pytest.raises(ValueError) as ei:
+        layouts.write_split(fs, "/p.arw", small_table,
+                            row_group_rows=2048, object_size=4096)
+    msg = str(ei.value)
+    assert "row_group_rows" in msg and "object_size" in msg
+
+
+def test_write_split_object_size_respected(fs, small_table):
+    index_path = layouts.write_split(fs, "/p.arw", small_table,
+                                     row_group_rows=256,
+                                     object_size=32 * 4096)
+    idx = layouts.read_split_index(fs, index_path)
+    for rg in idx.row_groups:
+        ino = fs.stat(rg["file"])
+        assert ino.stripe_unit == 32 * 4096
+        assert ino.object_count == 1
