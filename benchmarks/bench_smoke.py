@@ -88,12 +88,24 @@ def run_compaction_small() -> dict:
     return out
 
 
+def run_semi_join_small() -> dict:
+    from benchmarks import semi_join
+    semi_join.ROWS = 60_000
+    t0 = time.perf_counter()
+    out = semi_join.run()
+    out["wall_s"] = time.perf_counter() - t0
+    out["claims"] = semi_join.check_claims(out)
+    out["small_config"] = True
+    return out
+
+
 BENCHES = {
     "hedged_straggler": run_hedged_straggler,
     "adaptive_scan": run_adaptive_scan_small,
     "aggregate_pushdown": run_aggregate_pushdown_small,
     "limit_pushdown": run_limit_pushdown_small,
     "compaction": run_compaction_small,
+    "semi_join": run_semi_join_small,
 }
 
 

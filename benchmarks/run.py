@@ -13,7 +13,7 @@ import time
 
 from benchmarks import (adaptive_scan, compaction, fig5_latency_scaling,
                         fig6_cpu_utilization, ingest_train, kernel_bench,
-                        layout_compare)
+                        layout_compare, semi_join)
 
 BENCHES = {
     "fig5": fig5_latency_scaling.main,
@@ -23,6 +23,7 @@ BENCHES = {
     "ingest": ingest_train.main,
     "adaptive": adaptive_scan.main,
     "compaction": compaction.main,
+    "semi_join": semi_join.main,
 }
 
 

@@ -8,7 +8,9 @@ Parquet predicate pushdown (paper §2.3).
 
 from __future__ import annotations
 
+import base64
 import dataclasses
+import hashlib
 from typing import Any, Mapping
 
 import numpy as np
@@ -54,6 +56,12 @@ class Expr:
             return Not(Expr.from_json(d["expr"]))
         if kind == "isin":
             return IsIn(d["column"], d["values"])
+        if kind == "bloom":
+            return BloomIn(
+                d["column"],
+                base64.b64decode(d["bits"]),
+                d["num_bits"], d["num_hashes"], d["count"],
+                d.get("lo"), d.get("hi"))
         raise ValueError(kind)
 
 
@@ -162,6 +170,132 @@ class IsIn(Expr):
         return {"kind": "isin", "column": self.column,
                 "values": [v.item() if isinstance(v, np.generic) else v
                            for v in self.values]}
+
+
+def _mix64(x: np.ndarray, seed: int) -> np.ndarray:
+    """SplitMix64-style avalanche over a uint64 array (wrapping mults)."""
+    x = x.astype(np.uint64, copy=True) ^ np.uint64(seed)
+    with np.errstate(over="ignore"):
+        x ^= x >> np.uint64(33)
+        x *= np.uint64(0xFF51AFD7ED558CCD)
+        x ^= x >> np.uint64(33)
+        x *= np.uint64(0xC4CEB9FE1A85EC53)
+        x ^= x >> np.uint64(33)
+    return x
+
+
+def _key_words(values: np.ndarray) -> np.ndarray:
+    """Canonical uint64 word per key value, identical no matter which side
+    of the wire hashes it: integers widen, floats take their bit pattern
+    (-0.0 normalized to 0.0), strings take an 8-byte blake2b digest."""
+    arr = np.asarray(values)
+    if arr.dtype.kind in ("i", "u", "b"):
+        return arr.astype(np.int64).view(np.uint64).copy()
+    if arr.dtype.kind == "f":
+        f = arr.astype(np.float64).copy()
+        f[f == 0.0] = 0.0
+        return f.view(np.uint64).copy()
+    return np.fromiter(
+        (int.from_bytes(
+            hashlib.blake2b(str(v).encode("utf-8"),
+                            digest_size=8).digest(), "little")
+         for v in arr),
+        np.uint64, len(arr))
+
+
+@dataclasses.dataclass
+class BloomIn(Expr):
+    """Bloom-filter membership: ``column``'s value hashes into a bit array
+    built from a join's build-side keys.  May pass values that were never
+    inserted (false positives — callers that need exactness re-verify
+    against the true key set), never rejects an inserted value.  Carries
+    the inserted keys' min/max so footer-stats pruning stays exact:
+    a fragment whose range is disjoint from [lo, hi] is provably empty of
+    matches (NONE); ALL is never claimed."""
+
+    column: str
+    bits: bytes
+    num_bits: int
+    num_hashes: int
+    count: int                    # keys inserted (explain/selectivity)
+    lo: Any = None                # min/max of the inserted keys (numeric
+    hi: Any = None                # keys only; None disables range pruning)
+
+    @staticmethod
+    def build(column: str, values, *, bits_per_key: int = 10) -> "BloomIn":
+        arr = np.asarray(values)
+        n = max(1, len(arr))
+        num_bits = max(64, 1 << int(np.ceil(np.log2(n * bits_per_key))))
+        num_hashes = max(1, int(round(0.7 * num_bits / n)))
+        num_hashes = min(num_hashes, 8)
+        bitarr = np.zeros(num_bits // 8, np.uint8)
+        words = _key_words(arr)
+        h1 = _mix64(words, 0x9E3779B97F4A7C15)
+        h2 = _mix64(words, 0xD1B54A32D192ED03) | np.uint64(1)
+        for i in range(num_hashes):
+            with np.errstate(over="ignore"):
+                pos = (h1 + np.uint64(i) * h2) % np.uint64(num_bits)
+            np.bitwise_or.at(bitarr, (pos >> np.uint64(3)).astype(np.int64),
+                             np.uint8(1) << (pos & np.uint64(7)).astype(
+                                 np.uint8))
+        lo = hi = None
+        if arr.dtype.kind in ("i", "u", "f") and len(arr):
+            lo, hi = arr.min().item(), arr.max().item()
+        return BloomIn(column, bitarr.tobytes(), num_bits, num_hashes,
+                       len(arr), lo, hi)
+
+    def _test(self, values: np.ndarray) -> np.ndarray:
+        bitarr = np.frombuffer(self.bits, np.uint8)
+        words = _key_words(values)
+        h1 = _mix64(words, 0x9E3779B97F4A7C15)
+        h2 = _mix64(words, 0xD1B54A32D192ED03) | np.uint64(1)
+        mask = np.ones(len(words), "?")
+        for i in range(self.num_hashes):
+            with np.errstate(over="ignore"):
+                pos = (h1 + np.uint64(i) * h2) % np.uint64(self.num_bits)
+            bit = bitarr[(pos >> np.uint64(3)).astype(np.int64)] \
+                & (np.uint8(1) << (pos & np.uint64(7)).astype(np.uint8))
+            mask &= bit != 0
+        return mask
+
+    def evaluate(self, table):
+        col = table.column(self.column)
+        mask = self._test(col.values)
+        if col.validity is not None:
+            mask = mask & col.validity
+        return np.asarray(mask, "?")
+
+    def prune(self, stats):
+        st = stats.get(self.column)
+        if (st is None or st.min is None
+                or self.lo is None or self.hi is None):
+            return SOME
+        if st.max < self.lo or st.min > self.hi:
+            return NONE
+        return SOME               # never ALL: the filter is approximate
+
+    def columns(self):
+        return {self.column}
+
+    def digest(self) -> str:
+        """Short content digest — result-cache keys and explain() use it
+        instead of the (possibly kilobytes-long) bit array."""
+        h = hashlib.blake2s(digest_size=8)
+        h.update(self.bits)
+        h.update(f"{self.num_bits}/{self.num_hashes}/{self.count}".encode())
+        return h.hexdigest()
+
+    def to_json(self):
+        d = {"kind": "bloom", "column": self.column,
+             "bits": base64.b64encode(self.bits).decode("ascii"),
+             "num_bits": self.num_bits, "num_hashes": self.num_hashes,
+             "count": self.count}
+        if self.lo is not None:
+            v = self.lo
+            d["lo"] = v.item() if isinstance(v, np.generic) else v
+            v = self.hi
+            d["hi"] = v.item() if isinstance(v, np.generic) else v
+        return d
 
 
 @dataclasses.dataclass

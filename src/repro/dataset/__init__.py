@@ -6,8 +6,8 @@ from repro.dataset.format import (AdaptiveFormat, FileFormat, ParquetFormat,
                                   resolve_format)
 from repro.dataset.fragment import Fragment
 from repro.dataset.plan import (Aggregate, Count, Filter, FragmentTask,
-                                Limit, PhysicalPlan, PlanNode, Project,
-                                Query, Scan, ScanMetrics)
+                                Join, JoinStrategy, Limit, PhysicalPlan,
+                                PlanNode, Project, Query, Scan, ScanMetrics)
 from repro.dataset.scheduler import (ResultCache, ScanScheduler,
                                      modeled_latency)
 from repro.dataset.snapshot import (CommitConflict, CompactionReport,
@@ -18,6 +18,7 @@ __all__ = ["AdmissionController", "AggSpec", "Dataset", "ScanMetrics",
            "PushdownParquetFormat", "AdaptiveFormat", "TaskRecord",
            "Fragment", "ResultCache", "ScanScheduler", "modeled_latency",
            "Query", "PlanNode", "Scan", "Filter", "Project", "Aggregate",
-           "Limit", "Count", "FragmentTask", "PhysicalPlan",
+           "Limit", "Count", "Join", "JoinStrategy", "FragmentTask",
+           "PhysicalPlan",
            "resolve_format", "MutableDataset", "Manifest",
            "CommitConflict", "CompactionReport"]

@@ -3,7 +3,9 @@
 Discovery maps a CephFS prefix to a list of self-contained Fragments for
 any of the three layouts (flat single-object files, striped, split).
 Queries are built lazily through :meth:`Dataset.query` (select / filter /
-limit / aggregate / count), optimized as a logical plan, and lowered to
+limit / aggregate / count / join — joins push the build side's keys into
+the probe scan as an IN-list or bloom filter), optimized as a logical
+plan, and lowered to
 per-fragment physical tasks run by the one shared streaming executor
 (``repro.dataset.plan``) through whichever FileFormat placement the
 caller picked:

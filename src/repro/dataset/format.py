@@ -60,7 +60,9 @@ class FileFormat:
                       columns: Sequence[str] | None,
                       predicate: Expr | None,
                       admission=None,
-                      limit: int | None = None) -> tuple[Table, TaskRecord]:
+                      limit: int | None = None,
+                      selectivity_hint: float | None = None,
+                      ) -> tuple[Table, TaskRecord]:
         raise NotImplementedError
 
     def aggregate_fragment(self, fs: CephFS, frag: Fragment,
@@ -82,17 +84,19 @@ class FileFormat:
         routes through: one ``FragmentTask`` in (see ``dataset.plan``),
         one (Table | AggState, TaskRecord) out.  Dispatches to the
         format's ``scan_fragment`` / ``aggregate_fragment`` placement.
-        The ``limit`` kwarg is only forwarded when the task carries a row
-        budget, so format subclasses that predate limit pushdown keep
-        working for unbounded scans."""
+        The ``limit`` / ``selectivity_hint`` kwargs are only forwarded
+        when the task carries them, so format subclasses that predate
+        limit pushdown or semi-join pushdown keep working for plain
+        scans."""
         if task.kind == "scan":
+            kwargs: dict[str, Any] = {}
             if task.limit is not None:
-                return self.scan_fragment(fs, task.fragment, task.columns,
-                                          task.predicate,
-                                          admission=admission,
-                                          limit=task.limit)
+                kwargs["limit"] = task.limit
+            if getattr(task, "selectivity_hint", None) is not None:
+                kwargs["selectivity_hint"] = task.selectivity_hint
             return self.scan_fragment(fs, task.fragment, task.columns,
-                                      task.predicate, admission=admission)
+                                      task.predicate, admission=admission,
+                                      **kwargs)
         return self.aggregate_fragment(fs, task.fragment, task.specs,
                                        task.group_by, task.predicate,
                                        schema=task.schema,
@@ -169,7 +173,7 @@ class ParquetFormat(FileFormat):
     name = "parquet"
 
     def scan_fragment(self, fs, frag, columns, predicate, admission=None,
-                      limit=None):
+                      limit=None, selectivity_hint=None):
         wire = 0
 
         def on_read(n):
@@ -254,7 +258,8 @@ class PushdownParquetFormat(FileFormat):
         self.hedge_threshold_s = hedge_threshold_s
 
     def scan_fragment(self, fs, frag, columns, predicate, admission=None,
-                      limit=None):
+                      limit=None, selectivity_hint=None):
+        # the hint prices placement choices; a static placement ignores it
         doa = DirectObjectAccess(fs)
         payload = scan_payload(frag, columns, predicate, limit)
         with _admit_fragment(fs, frag, admission):
@@ -373,11 +378,10 @@ class AdaptiveFormat(FileFormat):
             return sched
 
     def scan_fragment(self, fs, frag, columns, predicate, admission=None,
-                      limit=None):
-        return self.scheduler_for(fs).scan_fragment(frag, columns,
-                                                    predicate,
-                                                    admission=admission,
-                                                    limit=limit)
+                      limit=None, selectivity_hint=None):
+        return self.scheduler_for(fs).scan_fragment(
+            frag, columns, predicate, admission=admission, limit=limit,
+            selectivity_hint=selectivity_hint)
 
     def aggregate_fragment(self, fs, frag, specs, group_by, predicate, *,
                            schema, max_groups=DEFAULT_MAX_GROUPS,

@@ -52,11 +52,18 @@ from repro.aformat.aggregate import (
     parse_aggs,
     partial_from_stats,
 )
-from repro.aformat.expressions import ALL, And, Cmp, Expr, IsIn, NONE, Not, Or
+from repro.aformat.expressions import (ALL, And, BloomIn, Cmp, Expr, IsIn,
+                                       NONE, Not, Or)
+from repro.aformat.schema import Field, Schema
 from repro.aformat.table import Column, Table
 from repro.dataset.admission import AdmissionController
 from repro.dataset.format import TaskRecord, resolve_format
 from repro.dataset.fragment import Fragment
+
+#: Distinct build-key cardinality at or below which the semi-join pass
+#: pushes an exact IN-list into the probe scan; above it, a bloom filter
+#: (approximate on the wire, re-verified at the client hash probe).
+IN_LIST_MAX = 256
 
 # ---------------------------------------------------------------------------
 # Logical plan IR
@@ -130,6 +137,24 @@ class Count(PlanNode):
         return [self.input]
 
 
+@dataclasses.dataclass
+class Join(PlanNode):
+    """Hash join: ``input`` is the probe side (streamed), ``build_query``
+    a whole separate Query whose result is hashed on ``on_right``.  The
+    join lowers per side — the build side runs first, then the semi-join
+    pass turns its keys into an IN-list or bloom filter conjoined into
+    the probe scan so OSDs drop non-matching rows before IPC."""
+
+    input: PlanNode
+    build_query: Any  # Query (may scan a different Dataset)
+    on_left: str
+    on_right: str
+    how: str = "inner"  # "inner" | "left" | "semi"
+
+    def children(self):
+        return [self.input]
+
+
 def render_expr(e: Expr | None) -> str:
     if e is None:
         return "true"
@@ -142,12 +167,21 @@ def render_expr(e: Expr | None) -> str:
     if isinstance(e, Not):
         return f"~({render_expr(e.expr)})"
     if isinstance(e, IsIn):
+        if len(e.values) > 8:
+            return f"{e.column} in <{len(e.values)}-key list>"
         return f"{e.column} in {e.values!r}"
+    if isinstance(e, BloomIn):
+        return (
+            f"{e.column} in bloom({e.count} keys, {e.num_bits} bits, "
+            f"digest={e.digest()})"
+        )
     return repr(e)
 
 
 def render_plan(root: PlanNode) -> list[str]:
-    """Indented one-node-per-line rendering of a logical plan."""
+    """Indented one-node-per-line rendering of a logical plan.  Join
+    nodes branch: the probe subtree renders inline, the build side under
+    an indented ``build:`` header."""
 
     def label(n: PlanNode) -> str:
         if isinstance(n, Scan):
@@ -169,15 +203,25 @@ def render_plan(root: PlanNode) -> list[str]:
             return f"Limit[n={n.n}]"
         if isinstance(n, Count):
             return "Count[]"
+        if isinstance(n, Join):
+            return f"Join[{n.how}, {n.on_left} = {n.on_right}]"
         return type(n).__name__
 
     lines: list[str] = []
-    node, depth = root, 0
-    while node is not None:
-        lines.append("  " * depth + label(node))
-        kids = node.children()
-        node = kids[0] if kids else None
-        depth += 1
+
+    def walk(node: PlanNode | None, depth: int):
+        while node is not None:
+            lines.append("  " * depth + label(node))
+            if isinstance(node, Join):
+                walk(node.input, depth + 1)
+                lines.append("  " * (depth + 1) + "build:")
+                walk(node.build_query._root, depth + 2)
+                return
+            kids = node.children()
+            node = kids[0] if kids else None
+            depth += 1
+
+    walk(root, 0)
     return lines
 
 
@@ -248,6 +292,11 @@ def _decompose(root: PlanNode) -> _QuerySpec:
             )
         elif isinstance(node, Count):
             raise ValueError("Count node left in plan: run rewrite_count")
+        elif isinstance(node, Join):
+            raise ValueError(
+                "join plans lower per side; run them via Query.to_table()"
+                "/to_batches()/explain()"
+            )
         else:
             raise ValueError(f"unknown plan node {type(node).__name__}")
         node = node.children()[0]
@@ -430,6 +479,10 @@ class FragmentTask:
     max_groups: int = DEFAULT_MAX_GROUPS
     schema: Any = None
     limit: int | None = None
+    #: Expected surviving-row fraction when a semi-join key filter was
+    #: pushed into this task — lets the adaptive scheduler price the
+    #: reduced reply bytes without waiting for EWMA history.
+    selectivity_hint: float | None = None
 
 
 @dataclasses.dataclass
@@ -580,6 +633,9 @@ class ScanMetrics:
     rows: int = 0
     wall_s: float = 0.0
     admission: dict = dataclasses.field(default_factory=dict)
+    #: Build-side metrics of a join run (its own scan), kept separate so
+    #: probe-side wire bytes stay directly comparable across strategies.
+    build: "ScanMetrics | None" = None
 
     @property
     def client_cpu_s(self) -> float:
@@ -602,7 +658,7 @@ class ScanMetrics:
         return sum(1 for t in self.tasks if t.hedged)
 
     def summary(self) -> dict:
-        return {
+        d = {
             "fragments": self.fragments_total,
             "pruned": self.fragments_pruned,
             "metadata_answers": self.metadata_answers,
@@ -615,6 +671,9 @@ class ScanMetrics:
             "hedged": self.hedged_tasks,
             "admission_waits": self.admission.get("waits", 0),
         }
+        if self.build is not None:
+            d["build"] = self.build.summary()
+        return d
 
 
 # ---------------------------------------------------------------------------
@@ -719,6 +778,271 @@ def empty_table(schema, columns: Sequence[str] | None) -> Table:
 
 
 # ---------------------------------------------------------------------------
+# Joins: build-side hashing, semi-join pushdown, probe-side assembly
+# ---------------------------------------------------------------------------
+
+_JOIN_HOWS = ("inner", "left", "semi")
+_INT_TYPES = {"int8", "int16", "int32", "int64"}
+
+
+@dataclasses.dataclass
+class _PostOps:
+    """Filter/Project/Limit nodes sitting *above* a Join: they run on the
+    assembled join output, client-side."""
+
+    predicate: Expr | None
+    project: tuple[str, ...] | None
+    limit: int | None
+
+
+def _split_join(root: PlanNode) -> tuple[_PostOps, Join, PlanNode]:
+    """Split a join plan into (post-join ops, join node, probe subtree)."""
+    predicate: Expr | None = None
+    project: tuple[str, ...] | None = None
+    limit: int | None = None
+    node = root
+    while not isinstance(node, Join):
+        if isinstance(node, Limit):
+            limit = node.n if limit is None else min(limit, node.n)
+        elif isinstance(node, Project):
+            if project is None:  # outermost projection wins
+                project = tuple(node.columns)
+        elif isinstance(node, Filter):
+            predicate = (
+                node.predicate
+                if predicate is None
+                else And(node.predicate, predicate)
+            )
+        else:
+            raise ValueError(
+                f"{type(node).__name__} above a join is not supported"
+            )
+        node = node.children()[0]
+    return _PostOps(predicate, project, limit), node, node.input
+
+
+def _join_fields(join: Join):
+    """Output shape of a join: (probe output names, [(build column,
+    renamed output Field)], all output Fields).
+
+    Semi joins emit probe columns only.  Inner/left emit probe columns
+    then build columns minus the build key (it duplicates the probe
+    key); build names clashing with an already-used name get ``_right``
+    suffixed until unique."""
+    pspec = _decompose(_copy_plan(join.input))
+    bspec = _decompose(_copy_plan(join.build_query._root))
+    probe_ds, build_ds = pspec.scan.dataset, bspec.scan.dataset
+    probe_names = (
+        list(pspec.project)
+        if pspec.project is not None
+        else list(probe_ds.schema.names)
+    )
+    probe_fields = [probe_ds.schema.field(n) for n in probe_names]
+    if join.how == "semi":
+        return probe_names, [], probe_fields
+    build_names = (
+        list(bspec.project)
+        if bspec.project is not None
+        else list(build_ds.schema.names)
+    )
+    used = set(probe_names)
+    pairs: list[tuple[str, Field]] = []
+    for n in build_names:
+        if n == join.on_right:
+            continue
+        f = build_ds.schema.field(n)
+        out = n
+        while out in used:
+            out += "_right"
+        used.add(out)
+        # a left join's unmatched probe rows null the build columns
+        pairs.append(
+            (n, Field(out, f.type, f.nullable or join.how == "left"))
+        )
+    return probe_names, pairs, probe_fields + [f for _, f in pairs]
+
+
+@dataclasses.dataclass
+class JoinStrategy:
+    """What the semi-join pass decided, for explain() and tests."""
+
+    how: str
+    on_left: str
+    on_right: str
+    build_rows: int
+    distinct_keys: int
+    pushdown: str  # "inlist" | "bloom" | "none"
+    reason: str = ""  # why pushdown is "none"
+    key_filter: Expr | None = None
+    selectivity_hint: float | None = None
+
+
+def _choose_strategy(
+    join: Join, probe_limit: int | None, probe_rows: int,
+    build_rows: int, distinct: np.ndarray,
+) -> JoinStrategy:
+    """The semi-join pushdown pass: inner/semi joins turn the build keys
+    into a probe-side filter — an exact IN-list when small, a bloom
+    filter when large.  Left joins keep every probe row, and a probe
+    limit means "any n probe rows" *before* the join, which a pushed
+    filter would silently change — both run unfiltered."""
+    n = len(distinct)
+    base = dict(how=join.how, on_left=join.on_left, on_right=join.on_right,
+                build_rows=build_rows, distinct_keys=n)
+    if join.how == "left":
+        return JoinStrategy(
+            **base, pushdown="none",
+            reason="left join keeps every probe row")
+    if probe_limit is not None:
+        return JoinStrategy(
+            **base, pushdown="none",
+            reason="probe-side limit pins pre-join row selection")
+    hint = min(1.0, max(n, 1) / max(1, probe_rows))
+    if n <= IN_LIST_MAX:
+        values = [
+            v.item() if isinstance(v, np.generic) else v for v in distinct
+        ]
+        return JoinStrategy(
+            **base, pushdown="inlist",
+            key_filter=IsIn(join.on_left, values), selectivity_hint=hint)
+    return JoinStrategy(
+        **base, pushdown="bloom",
+        key_filter=BloomIn.build(join.on_left, distinct),
+        selectivity_hint=hint)
+
+
+def _linear_root(
+    spec: _QuerySpec,
+    columns: Sequence[str] | None,
+    extra_pred: Expr | None = None,
+) -> PlanNode:
+    """Rebuild a linear logical plan from a decomposed side of a join,
+    with the pushed key filter (if any) conjoined into the predicate so
+    ``prune_fragments`` and ``scan_op`` see one composed residual."""
+    root: PlanNode = Scan(spec.scan.dataset)
+    pred = spec.predicate
+    if extra_pred is not None:
+        pred = extra_pred if pred is None else And(pred, extra_pred)
+    if pred is not None:
+        root = Filter(root, pred)
+    if columns is not None:
+        root = Project(root, tuple(columns))
+    if spec.limit is not None:
+        root = Limit(root, spec.limit)
+    return root
+
+
+def _key_validity(col: Column) -> np.ndarray:
+    """Join-key semantics: null keys never match, and neither do NaNs
+    (SQL equality, matching the NumPy reference)."""
+    valid = (
+        np.ones(len(col.values), "?")
+        if col.validity is None
+        else col.validity.astype(bool)
+    )
+    if col.field.type in ("float32", "float64"):
+        valid = valid & ~np.isnan(col.values)
+    return valid
+
+
+@dataclasses.dataclass
+class _JoinContext:
+    how: str
+    on_left: str
+    probe_names: list[str]
+    build_pairs: list  # [(build column name, renamed output Field)]
+    fields: list  # joined output Fields
+    build_tbl: Table
+    index: dict  # key -> [build row idx], build-row order
+    distinct: np.ndarray  # exact distinct non-null build keys
+    strategy: JoinStrategy
+
+
+def _gather_build(ctx: _JoinContext, bi: np.ndarray) -> list[Column]:
+    """Gather build-side output columns by row index; ``-1`` marks an
+    unmatched probe row (left join): null, zero-filled storage."""
+    matched = bi >= 0
+    safe = np.where(matched, bi, 0)
+    out: list[Column] = []
+    for name, field in ctx.build_pairs:
+        col = ctx.build_tbl.column(name)
+        if len(col.values) == 0:
+            vals = (
+                np.array([""] * len(bi), object)
+                if field.type == "string"
+                else np.zeros(len(bi), field.numpy_dtype)
+            )
+            out.append(Column(field, vals, np.zeros(len(bi), "?")))
+            continue
+        vals = col.values[safe]
+        valid = (
+            np.ones(len(bi), "?")
+            if col.validity is None
+            else col.validity[safe].astype(bool)
+        )
+        if not matched.all():
+            vals = vals.copy()
+            vals[~matched] = "" if field.type == "string" else 0
+            valid = valid & matched
+        out.append(Column(field, vals, valid))
+    return out
+
+
+def _join_batch(tbl: Table, ctx: _JoinContext) -> Table:
+    """Probe one batch against the built table.  Probe rows keep their
+    scan order; a probe row's matches come out in build-row order —
+    deterministic, so the differential harness can assert exact
+    equality."""
+    kcol = tbl.column(ctx.on_left)
+    kvalid = _key_validity(kcol)
+    kvals = kcol.values
+    probe = tbl.select(ctx.probe_names)
+    if ctx.how == "semi":
+        mask = np.zeros(len(tbl), "?")
+        if len(ctx.distinct):
+            # exact membership: bloom false positives die here
+            mask = np.isin(kvals, ctx.distinct) & kvalid
+        return probe.filter(mask)
+    pidx: list[int] = []
+    bidx: list[int] = []
+    for i in range(len(tbl)):
+        rows = ctx.index.get(kvals[i]) if kvalid[i] else None
+        if rows:
+            pidx.extend([i] * len(rows))
+            bidx.extend(rows)
+        elif ctx.how == "left":
+            pidx.append(i)
+            bidx.append(-1)
+    pi = np.asarray(pidx, np.int64)
+    bi = np.asarray(bidx, np.int64)
+    cols = list(probe.take(pi).columns) + _gather_build(ctx, bi)
+    return Table(Schema(tuple(ctx.fields)), cols)
+
+
+def _empty_join_table(ctx: _JoinContext) -> Table:
+    return Table(
+        Schema(tuple(ctx.fields)),
+        [
+            Column(
+                f,
+                np.empty(0, object if f.type == "string" else f.numpy_dtype),
+            )
+            for f in ctx.fields
+        ],
+    )
+
+
+def _apply_post(tbl: Table, post: _PostOps) -> Table:
+    if post.predicate is not None:
+        tbl = tbl.filter(post.predicate.evaluate(tbl))
+    if post.project is not None:
+        tbl = tbl.select(list(post.project))
+    if post.limit is not None:
+        tbl = tbl.head(post.limit)
+    return tbl
+
+
+# ---------------------------------------------------------------------------
 # The Query builder
 # ---------------------------------------------------------------------------
 
@@ -769,11 +1093,21 @@ class Query:
             isinstance(n, (Aggregate, Count)) for n in _walk(self._root)
         )
 
+    def _join_node(self) -> Join | None:
+        for n in _walk(self._root):
+            if isinstance(n, Join):
+                return n
+        return None
+
     def _require_relational(self, verb: str):
         if self._has_aggregate:
             raise ValueError(
                 f"{verb} cannot be applied after aggregate()/count()"
             )
+
+    def _require_no_join(self, verb: str):
+        if self._join_node() is not None:
+            raise ValueError(f"{verb} over a join is not supported")
 
     def _require_unlimited(self, verb: str):
         # aggregating "any n rows" has no well-defined answer here: the
@@ -793,14 +1127,27 @@ class Query:
             columns = tuple(columns[0])
         if not columns:
             raise ValueError("select() needs at least one column")
-        if self.ds.schema is None:
-            raise ValueError("select() on a dataset with no schema "
-                             "(empty dataset)")
         for c in columns:
             if not isinstance(c, str):
                 raise TypeError(
                     f"select() takes column names, got {type(c).__name__}"
                 )
+        join = self._join_node()
+        if join is not None:
+            # post-join projection: validate against the join's output
+            # shape (probe columns + renamed build columns)
+            names = {f.name for f in _join_fields(join)[2]}
+            for c in columns:
+                if c not in names:
+                    raise KeyError(
+                        f"select({c!r}): not a join output column "
+                        f"(have {sorted(names)})"
+                    )
+            return self._derive(Project(self._root, tuple(columns)))
+        if self.ds.schema is None:
+            raise ValueError("select() on a dataset with no schema "
+                             "(empty dataset)")
+        for c in columns:
             self.ds.schema.field(c)  # validate early
         return self._derive(Project(self._root, tuple(columns)))
 
@@ -827,6 +1174,7 @@ class Query:
     ) -> "Query":
         """SUM/MIN/MAX/MEAN/COUNT, optionally GROUP BY one key column."""
         self._require_relational("aggregate()")
+        self._require_no_join("aggregate()")
         self._require_unlimited("aggregate()")
         specs = parse_aggs(aggs)
         if not specs:
@@ -851,8 +1199,69 @@ class Query:
     def count(self) -> "Query":
         """COUNT(*): a scalar query (``to_scalar`` returns the int)."""
         self._require_relational("count()")
+        self._require_no_join("count()")
         self._require_unlimited("count()")
         return self._derive(Count(self._root), scalar=True)
+
+    def join(self, other: "Query", *, on, how: str = "inner") -> "Query":
+        """Hash-join this query (the probe side) against ``other`` (the
+        build side).  ``on`` is a key column name present on both sides,
+        or a ``(left, right)`` pair; ``how`` is ``"inner"``, ``"left"``
+        or ``"semi"`` (semi keeps probe rows with ≥1 match, emits probe
+        columns only).
+
+        Execution is storage-native for inner/semi joins: the build
+        side runs first, its distinct keys become an IN-list (small) or
+        bloom filter (large) conjoined into the probe scan's residual
+        predicate, so storage nodes drop non-matching rows before IPC.
+        Null and NaN keys never match.  A probe row's matches surface
+        in build-row order, making results exactly reproducible."""
+        self._require_relational("join()")
+        self._require_no_join("join() (nested joins)")
+        if not isinstance(other, Query):
+            raise TypeError(
+                f"join() takes a Query build side, got "
+                f"{type(other).__name__}"
+            )
+        if how not in _JOIN_HOWS:
+            raise ValueError(f"how must be one of {_JOIN_HOWS}, got {how!r}")
+        if other._has_aggregate:
+            raise ValueError(
+                "join() build side cannot be an aggregate/count query"
+            )
+        if other._join_node() is not None:
+            raise ValueError("join() build side cannot itself be a join")
+        if any(isinstance(n, Limit) for n in _walk(other._root)):
+            raise ValueError(
+                "join() build side with limit() is not supported (the "
+                "build keys would be a nondeterministic subset)"
+            )
+        if isinstance(on, str):
+            on_left = on_right = on
+        else:
+            try:
+                on_left, on_right = on
+            except (TypeError, ValueError):
+                raise ValueError(
+                    "on must be a column name or a (left, right) pair"
+                ) from None
+        if self.ds.schema is None or other.ds.schema is None:
+            raise ValueError(
+                "join() needs a schema on both sides (empty dataset)"
+            )
+        lf = self.ds.schema.field(on_left)
+        rf = other.ds.schema.field(on_right)
+        compatible = lf.type == rf.type or (
+            lf.type in _INT_TYPES and rf.type in _INT_TYPES
+        )
+        if not compatible:
+            raise TypeError(
+                f"join key types differ: {on_left} is {lf.type}, "
+                f"{on_right} is {rf.type}"
+            )
+        return self._derive(
+            Join(self._root, other, on_left, on_right, how)
+        )
 
     # -- plan access -------------------------------------------------------
     def logical_plan(self) -> PlanNode:
@@ -875,11 +1284,152 @@ class Query:
         self.metrics = m
         return m
 
+    # -- join execution ----------------------------------------------------
+    def _prepare_join(self):
+        """Run the build side, pick the pushdown strategy, lower the
+        probe side with the key filter conjoined in.  Returns
+        (probe PhysicalPlan, _JoinContext, build Query, _PostOps)."""
+        post, join, probe_root = _split_join(_copy_plan(self._root))
+        pspec = _decompose(probe_root)
+        bspec = _decompose(_copy_plan(join.build_query._root))
+        probe_ds = pspec.scan.dataset
+
+        bcols = None
+        if bspec.project is not None:
+            bcols = list(bspec.project)
+            if join.on_right not in bcols:
+                bcols.append(join.on_right)
+        bq = join.build_query._derive(_linear_root(bspec, bcols))
+        build_tbl = bq.to_table()
+
+        probe_names, pairs, fields = _join_fields(join)
+        kcol = build_tbl.column(join.on_right)
+        valid = _key_validity(kcol)
+        index: dict = {}
+        for i in np.flatnonzero(valid):
+            index.setdefault(kcol.values[i], []).append(int(i))
+        distinct = (
+            np.unique(kcol.values[valid])
+            if valid.any()
+            else kcol.values[:0]
+        )
+
+        strategy = _choose_strategy(
+            join, pspec.limit, probe_ds.num_rows, len(build_tbl), distinct
+        )
+        pcols = None
+        if pspec.project is not None:
+            pcols = list(pspec.project)
+            if join.on_left not in pcols:
+                pcols.append(join.on_left)
+        plan = lower(_linear_root(pspec, pcols, strategy.key_filter))
+        if strategy.selectivity_hint is not None:
+            for t in plan.tasks:
+                t.selectivity_hint = strategy.selectivity_hint
+        ctx = _JoinContext(
+            join.how, join.on_left, probe_names, pairs, fields,
+            build_tbl, index, distinct, strategy,
+        )
+        return plan, ctx, bq, post
+
+    def _join_to_table(self) -> Table:
+        plan, ctx, bq, post = self._prepare_join()
+        metrics = self._begin(plan)
+        metrics.build = bq.metrics
+        parts = sorted(
+            stream_tasks(
+                plan,
+                self.fmt,
+                metrics,
+                max_inflight=self.num_threads,
+                queue_depth=self.queue_depth,
+            ),
+            key=lambda p: p[0].index,
+        )
+        if plan.limit is not None:
+            # probe-side limit: trim the probe rows first (the budget is
+            # on probe rows), then join once
+            tables = [t for _, t in parts if len(t)]
+            probe_tbl = (
+                Table.concat(tables)
+                if tables
+                else empty_table(plan.dataset.schema, plan.columns)
+            )
+            joined = [_join_batch(probe_tbl.head(plan.limit), ctx)]
+        else:
+            joined = [_join_batch(t, ctx) for _, t in parts]
+        tables = [t for t in joined if len(t)]
+        result = (
+            Table.concat(tables) if tables else _empty_join_table(ctx)
+        )
+        result = _apply_post(result, post)
+        metrics.rows = len(result)
+        return result
+
+    def _join_batches(self, max_inflight: int | None) -> Iterator[Table]:
+        plan, ctx, bq, post = self._prepare_join()
+        metrics = self._begin(plan)
+        metrics.build = bq.metrics
+
+        def gen():
+            if plan.limit is not None:
+                # probe-side limit: materialized path (single batch out)
+                parts = sorted(
+                    stream_tasks(
+                        plan,
+                        self.fmt,
+                        metrics,
+                        max_inflight=max_inflight or self.num_threads,
+                        queue_depth=self.queue_depth,
+                    ),
+                    key=lambda p: p[0].index,
+                )
+                tables = [t for _, t in parts if len(t)]
+                probe_tbl = (
+                    Table.concat(tables)
+                    if tables
+                    else empty_table(plan.dataset.schema, plan.columns)
+                )
+                result = _apply_post(
+                    _join_batch(probe_tbl.head(plan.limit), ctx), post
+                )
+                metrics.rows = len(result)
+                if len(result):
+                    yield result
+                return
+            remaining = post.limit
+            for _task, tbl in stream_tasks(
+                plan,
+                self.fmt,
+                metrics,
+                max_inflight=max_inflight or self.num_threads,
+                queue_depth=self.queue_depth,
+            ):
+                part = _join_batch(tbl, ctx)
+                if post.predicate is not None:
+                    part = part.filter(post.predicate.evaluate(part))
+                if post.project is not None:
+                    part = part.select(list(post.project))
+                if remaining is not None:
+                    part = part.head(remaining)
+                    remaining -= len(part)
+                if len(part):
+                    metrics.rows += len(part)
+                    yield part
+                if remaining is not None and remaining <= 0:
+                    return  # post-limit met: cancel still-queued probes
+
+        return gen()
+
     def to_batches(
         self, *, max_inflight: int | None = None
     ) -> Iterator[Table]:
         """Stream per-fragment Tables in completion order under the row
-        budget; empty fragments are skipped."""
+        budget; empty fragments are skipped.  Join queries stream the
+        probe side against the built hash table (probe-side limits
+        materialize first)."""
+        if self._join_node() is not None:
+            return self._join_batches(max_inflight)
         plan = lower(_copy_plan(self._root))
         if plan.kind != "scan":
             raise ValueError(
@@ -909,7 +1459,10 @@ class Query:
 
     def to_table(self) -> Table:
         """Materialize the result (scan plans reassemble fragments in
-        plan order; aggregates finalize the merged partial state)."""
+        plan order; aggregates finalize the merged partial state; joins
+        assemble probe batches against the built hash table)."""
+        if self._join_node() is not None:
+            return self._join_to_table()
         plan = lower(_copy_plan(self._root))
         metrics = self._begin(plan)
         if plan.kind == "aggregate":
@@ -960,15 +1513,10 @@ class Query:
         return v.item() if isinstance(v, np.generic) else v
 
     # -- explain -----------------------------------------------------------
-    def explain(self, *, max_fragments: int = 12) -> str:
-        """Render the logical plan, the optimizer passes, and the lowered
-        physical tasks with per-fragment placement/cache/hedge state."""
-        lines = ["== logical plan =="]
-        lines += render_plan(self._root)
-        plan = lower(_copy_plan(self._root))
-        lines.append("== optimizer ==")
-        lines += [f"- {p}" for p in plan.passes]
-        lines.append("== physical plan ==")
+    def _physical_lines(
+        self, plan: PhysicalPlan, max_fragments: int
+    ) -> list[str]:
+        lines = ["== physical plan =="]
         budget = (
             f", row_budget={plan.limit}" if plan.limit is not None else ""
         )
@@ -997,6 +1545,66 @@ class Query:
                 f"{lim} | {where}"
             )
             shown += 1
+        return lines
+
+    def _explain_join(self, *, max_fragments: int) -> str:
+        plan, ctx, _bq, _post = self._prepare_join()
+        s = ctx.strategy
+        lines = ["== logical plan =="]
+        lines += render_plan(self._root)
+        lines.append("== join ==")
+        lines.append(
+            f"- strategy: hash {s.how} join on {s.on_left} = {s.on_right}; "
+            f"build side {s.build_rows} rows, {s.distinct_keys} distinct "
+            "keys"
+        )
+        if s.pushdown == "inlist":
+            lines.append(
+                f"- semijoin-pushdown: IN-list({s.distinct_keys} keys) "
+                f"conjoined into probe scan (selectivity hint "
+                f"{s.selectivity_hint:.4f})"
+            )
+        elif s.pushdown == "bloom":
+            bf = s.key_filter
+            lines.append(
+                f"- semijoin-pushdown: bloom({bf.num_bits} bits, "
+                f"{bf.num_hashes} hashes, digest={bf.digest()}) conjoined "
+                f"into probe scan (selectivity hint "
+                f"{s.selectivity_hint:.4f})"
+            )
+        else:
+            lines.append(f"- semijoin-pushdown: none ({s.reason})")
+        lines.append("== optimizer ==")
+        lines += [f"- {p}" for p in plan.passes]
+        lines += self._physical_lines(plan, max_fragments)
+        pruned = [d for d in plan.decisions if d.action == "pruned"]
+        shown = 0
+        for d in pruned:
+            if shown >= max_fragments:
+                lines.append(f"  ... (+{len(pruned) - shown} more pruned)")
+                break
+            lines.append(
+                f"  [-] pruned {d.fragment.path}#{d.fragment.obj_idx} "
+                f"({d.detail})"
+            )
+            shown += 1
+        return "\n".join(lines)
+
+    def explain(self, *, max_fragments: int = 12) -> str:
+        """Render the logical plan, the optimizer passes, and the lowered
+        physical tasks with per-fragment placement/cache/hedge state.
+
+        Join plans add a ``== join ==`` section (strategy + pushdown
+        decision); rendering it *runs the build side*, because the
+        pushed filter is its keys."""
+        if self._join_node() is not None:
+            return self._explain_join(max_fragments=max_fragments)
+        lines = ["== logical plan =="]
+        lines += render_plan(self._root)
+        plan = lower(_copy_plan(self._root))
+        lines.append("== optimizer ==")
+        lines += [f"- {p}" for p in plan.passes]
+        lines += self._physical_lines(plan, max_fragments)
         return "\n".join(lines)
 
 

@@ -246,7 +246,8 @@ class ScanScheduler:
         return sum(o.threads for o in self.store.osds if not o.down) or 1
 
     def estimate(self, frag: Fragment, *,
-                 out_bytes: float | None = None) -> PlacementEstimate:
+                 out_bytes: float | None = None,
+                 selectivity_hint: float | None = None) -> PlacementEstimate:
         """Price both placements for this fragment from live load and the
         learned decode-rate / selectivity estimates.
 
@@ -256,12 +257,18 @@ class ScanScheduler:
         pressure; client decode spreads over the client's private threads
         but its NIC must carry the raw bytes.  ``out_bytes`` overrides the
         learned selectivity estimate when the caller knows the result size
-        (an aggregate ships back a constant few bytes)."""
+        (an aggregate ships back a constant few bytes);
+        ``selectivity_hint`` scales the learned output ratio instead when
+        the caller knows the surviving-row fraction (a semi-join filter
+        pushed into the scan), so the reduced reply bytes price in before
+        any EWMA history exists."""
         in_bytes = self._frag_bytes(frag)
         rate = self._decode_rate.value(DEFAULT_DECODE_RATE)
         decode_s = in_bytes / max(rate, 1.0)
         if out_bytes is None:
             out_bytes = in_bytes * self._out_ratio.value(DEFAULT_OUT_RATIO)
+            if selectivity_hint is not None:
+                out_bytes *= min(1.0, max(0.0, selectivity_hint))
         pressure = self.pressure_of(frag)
         est_osd = max(decode_s * pressure / self.storage_threads(),
                       out_bytes / self.net_bw)
@@ -303,6 +310,12 @@ class ScanScheduler:
         cols = tuple(columns) if columns is not None else None
         pred_json = json.dumps(predicate.to_json(), sort_keys=True) \
             if predicate is not None else ""
+        if len(pred_json) > 160:
+            # semi-join key filters (IN-lists, bloom bit arrays) can be
+            # kilobytes of JSON; key on a content digest instead so cache
+            # entries stay cheap while different filters never collide
+            pred_json = "digest:" + hashlib.blake2s(
+                pred_json.encode(), digest_size=16).hexdigest()
         # limit is part of the identity: a truncated result must never be
         # served to an unbounded scan (or to a larger budget)
         return (name, version, footer_hash, frag.rg_in_object, cols,
@@ -320,14 +333,19 @@ class ScanScheduler:
                       columns: Sequence[str] | None,
                       predicate: Expr | None,
                       admission=None,
-                      limit: int | None = None) -> tuple[Table, TaskRecord]:
+                      limit: int | None = None,
+                      selectivity_hint: float | None = None,
+                      ) -> tuple[Table, TaskRecord]:
         """Cache lookup -> placement decision -> (hedged) execution.
 
         Returns the same (Table, TaskRecord) contract as a FileFormat, so
         ``AdaptiveFormat`` is a drop-in placement.  ``admission`` bounds
         in-flight work per OSD; a cache hit never takes a slot.
         ``limit`` rides into ``scan_op`` (the node stops decoding at the
-        budget) and keys the result cache."""
+        budget) and keys the result cache.  ``selectivity_hint`` (a
+        semi-join filter's expected surviving fraction) prices the
+        placement only — results are identical either way, so it stays
+        out of the cache key."""
         key = self.cache_key(frag, columns, predicate, limit)
         ipc = self.cache.get(key)
         if ipc is not None:
@@ -340,7 +358,7 @@ class ScanScheduler:
                              cached=True)
             return tbl, rec
 
-        est = self.estimate(frag)
+        est = self.estimate(frag, selectivity_hint=selectivity_hint)
         with self._admit(frag, admission):
             if est.where == "osd":
                 try:

@@ -24,7 +24,7 @@ from repro.aformat import parquet
 from repro.aformat.aggregate import (AggSpec, AggState, CardinalityError,
                                      needed_columns, partial_aggregate,
                                      partial_from_stats)
-from repro.aformat.expressions import Expr
+from repro.aformat.expressions import Expr, NONE
 from repro.aformat.table import Table
 from repro.storage.objstore import ObjectStore, ObjectHandle
 
@@ -85,6 +85,12 @@ def scan_op(obj: ObjectHandle, payload: dict) -> bytes:
     parts = []
     rows = 0
     for rg in metas:
+        if predicate is not None:
+            # storage-side stats skip: a row group whose min/max prove the
+            # predicate (e.g. a pushed semi-join key filter) matches no
+            # rows is never decoded
+            if predicate.prune(rg.column_stats(meta.schema)) == NONE:
+                continue
         part = parquet.scan_row_group(obj, meta, rg, columns, predicate)
         parts.append(part)
         rows += len(part)

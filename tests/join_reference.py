@@ -1,0 +1,184 @@
+"""Pure-NumPy reference joins for the differential harness.
+
+Independent implementation of the join semantics `Query.join` promises,
+computed directly on in-memory Tables with sort + searchsorted (no hash
+tables, no shared code with the executor), so agreement is meaningful:
+
+- probe rows keep their input order; a probe row's matches surface in
+  build-row order (stable sort preserves it within equal keys);
+- null keys and NaN keys never match (SQL equality);
+- semi joins emit probe columns only, keeping probe rows with >= 1 match;
+- inner/left joins emit probe columns then build columns minus the build
+  key; build names clashing with an used name get ``_right`` suffixed;
+- a left join's unmatched probe rows null the build columns (validity
+  False over zero/""-filled storage), and those columns' fields become
+  nullable.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.aformat.schema import Field, Schema
+from repro.aformat.table import Column, Table
+
+
+def _key_array(col: Column) -> tuple[np.ndarray, np.ndarray]:
+    """(comparable key array, validity mask) with nulls/NaNs invalid."""
+    vals = np.asarray(col.values)
+    valid = (
+        np.ones(len(vals), "?")
+        if col.validity is None
+        else col.validity.astype(bool)
+    )
+    if vals.dtype.kind == "f":
+        valid = valid & ~np.isnan(vals)
+    if vals.dtype.kind == "O":
+        vals = np.asarray([str(v) for v in vals], object)
+    return vals, valid
+
+
+def _match_ranges(pk, pvalid, bk, bvalid):
+    """For each probe row: (sorted-build lo, hi) half-open match range
+    plus the build-row permutation that makes ranges contiguous.  A
+    stable argsort keeps equal-key build rows in build-row order, which
+    is exactly the executor's per-probe-row match order."""
+    bidx = np.flatnonzero(bvalid)
+    bkeys = bk[bidx]
+    order = np.argsort(bkeys, kind="stable")
+    skeys, srows = bkeys[order], bidx[order]
+    lo = np.searchsorted(skeys, pk, side="left")
+    hi = np.searchsorted(skeys, pk, side="right")
+    lo = np.where(pvalid, lo, 0)
+    hi = np.where(pvalid, hi, 0)
+    return lo, hi, srows
+
+
+def _null_column(field: Field, n: int) -> Column:
+    vals = (
+        np.array([""] * n, object)
+        if field.type == "string"
+        else np.zeros(n, field.numpy_dtype)
+    )
+    return Column(field, vals, np.zeros(n, "?"))
+
+
+def output_fields(
+    probe: Table, build: Table, on_left: str, on_right: str, how: str
+) -> tuple[list[Field], list[tuple[str, Field]]]:
+    """(joined output fields, [(build column, renamed output Field)])."""
+    probe_fields = list(probe.schema)
+    if how == "semi":
+        return probe_fields, []
+    used = {f.name for f in probe_fields}
+    pairs: list[tuple[str, Field]] = []
+    for f in build.schema:
+        if f.name == on_right:
+            continue
+        out = f.name
+        while out in used:
+            out += "_right"
+        used.add(out)
+        pairs.append((f.name, Field(out, f.type,
+                                    f.nullable or how == "left")))
+    return probe_fields + [f for _, f in pairs], pairs
+
+
+def reference_join(
+    probe: Table,
+    build: Table,
+    *,
+    on: "str | tuple[str, str]",
+    how: str = "inner",
+) -> Table:
+    """Join two in-memory Tables the way ``Query.join`` promises to."""
+    on_left, on_right = (on, on) if isinstance(on, str) else on
+    pk, pvalid = _key_array(probe.column(on_left))
+    bk, bvalid = _key_array(build.column(on_right))
+    fields, pairs = output_fields(probe, build, on_left, on_right, how)
+
+    if not bvalid.any():
+        lo = hi = np.zeros(len(probe), np.int64)
+        srows = np.empty(0, np.int64)
+    else:
+        lo, hi, srows = _match_ranges(pk, pvalid, bk, bvalid)
+    counts = hi - lo
+
+    if how == "semi":
+        return probe.filter(counts > 0)
+
+    if how == "inner":
+        pi = np.repeat(np.arange(len(probe)), counts)
+        total = int(counts.sum())
+        # vectorized "concatenate(range(lo_i, hi_i))": offset each probe
+        # row's slot index into its sorted-build range
+        starts = np.repeat(lo, counts)
+        offsets = np.arange(total) - np.repeat(
+            np.cumsum(counts) - counts, counts
+        )
+        bi = srows[starts + offsets] if total else np.empty(0, np.int64)
+    else:  # left
+        out_counts = np.maximum(counts, 1)
+        pi = np.repeat(np.arange(len(probe)), out_counts)
+        total = int(out_counts.sum())
+        starts = np.repeat(lo, out_counts)
+        offsets = np.arange(total) - np.repeat(
+            np.cumsum(out_counts) - out_counts, out_counts
+        )
+        slot = starts + offsets
+        matched = np.repeat(counts > 0, out_counts)
+        bi = np.where(
+            matched,
+            srows[np.where(matched, slot, 0)] if len(srows) else 0,
+            -1,
+        )
+
+    cols = list(probe.take(pi).columns)
+    for name, field in pairs:
+        col = build.column(name)
+        if len(col.values) == 0:
+            cols.append(_null_column(field, len(pi)))
+            continue
+        ok = bi >= 0
+        safe = np.where(ok, bi, 0)
+        vals = col.values[safe]
+        valid = (
+            np.ones(len(bi), "?")
+            if col.validity is None
+            else col.validity[safe].astype(bool)
+        )
+        if not ok.all():
+            vals = vals.copy()
+            vals[~ok] = "" if field.type == "string" else 0
+            valid = valid & ok
+        cols.append(Column(field, vals, valid))
+    return Table(Schema(tuple(fields)), cols)
+
+
+def assert_tables_equal(actual: Table, expected: Table):
+    """Byte-exact table equality: schema (names, types, nullability),
+    row count, validity masks, and values — including the zero/""-fill
+    convention under null slots, so storage is bit-identical too."""
+    assert actual.schema == expected.schema, (
+        f"schema mismatch:\n  actual   {actual.schema}\n"
+        f"  expected {expected.schema}"
+    )
+    assert len(actual) == len(expected), (
+        f"row count {len(actual)} != {len(expected)}"
+    )
+    for f, a, e in zip(actual.schema, actual.columns, expected.columns):
+        va = np.ones(len(a), "?") if a.validity is None else a.validity
+        ve = np.ones(len(e), "?") if e.validity is None else e.validity
+        assert np.array_equal(va, ve), f"{f.name}: validity differs"
+        if f.type == "string":
+            assert [str(v) for v in a.values] == \
+                [str(v) for v in e.values], f"{f.name}: values differ"
+        else:
+            assert a.values.dtype == e.values.dtype, (
+                f"{f.name}: dtype {a.values.dtype} != {e.values.dtype}"
+            )
+            same = np.array_equal(
+                a.values, e.values,
+                equal_nan=a.values.dtype.kind == "f",
+            )
+            assert same, f"{f.name}: values differ"

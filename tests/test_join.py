@@ -1,0 +1,861 @@
+"""Differential + fault-injection harness for joins.
+
+``Query.join`` promises *exactly reproducible* results: probe rows keep
+scan order, a probe row's matches surface in build-row order, null/NaN
+keys never match, and the storage-side semi-join pushdown (IN-list or
+bloom filter conjoined into the probe ``scan_op``) must never change a
+single output byte.  Every test here therefore asserts byte-exact
+equality against ``tests/join_reference.py`` — an independent pure-NumPy
+sort+searchsorted implementation that shares no code with the executor's
+hash join.
+
+Sections:
+  * differential grid: layout x format x how x residual-predicate over
+    data with null keys and duplicate keys on both sides;
+  * builder validation + strategy selection (IN-list/bloom boundary,
+    left-join and probe-limit opt-outs, selectivity-hint threading);
+  * golden explain() rendering for join plans;
+  * fault injection: probe-side OSD scan service down (clean client
+    fallback, no partial rows), hedged build side (first reply wins
+    exactly once), result-cache invalidation across append()/compact()
+    and digest-keyed filters (no false hits);
+  * a hypothesis property test (skipped when hypothesis is absent).
+"""
+
+import numpy as np
+import pytest
+
+from join_reference import assert_tables_equal, reference_join
+from repro.aformat.expressions import BloomIn, IsIn, field
+from repro.aformat.schema import schema
+from repro.aformat.table import Column, Table
+from repro.core import (
+    dataset,
+    make_cluster,
+    write_flat,
+    write_split,
+    write_striped,
+)
+from repro.dataset import (
+    AdaptiveFormat,
+    MutableDataset,
+    PushdownParquetFormat,
+    ScanScheduler,
+)
+from repro.dataset.plan import IN_LIST_MAX
+from repro.storage.objstore import OSDDownError
+
+WRITERS = {
+    "flat": write_flat,
+    "striped": write_striped,
+    "split": write_split,
+}
+FORMATS = ["parquet", "pushdown", "adaptive"]
+HOWS = ["inner", "left", "semi"]
+
+
+# ---------------------------------------------------------------------------
+# fixtures: null keys + duplicate keys on BOTH sides, clashing column name
+# ---------------------------------------------------------------------------
+
+
+def _sample_tables():
+    """(probe, build) with every awkward case the executor must handle:
+    ~5% null probe keys, duplicate keys on both sides, a build column
+    (``tag``) clashing with a probe column, null build keys.  Values
+    under null slots are zeroed so the storage round-trip is
+    bit-identical to the in-memory reference."""
+    rng = np.random.default_rng(7)
+    n = 3000
+    kvalid = rng.random(n) > 0.05
+    keys = np.where(kvalid, rng.integers(0, 60, n), 0).astype(np.int64)
+    psch = schema(
+        ("pid", "int64"), ("key", "int64"), ("amt", "float64"),
+        ("tag", "string"), nullable=("key",),
+    )
+    probe = Table(psch, [
+        Column(psch.field("pid"), np.arange(n, dtype=np.int64)),
+        Column(psch.field("key"), keys, kvalid),
+        Column(psch.field("amt"), np.round(rng.gamma(2.0, 7.5, n), 2)),
+        Column(psch.field("tag"),
+               rng.choice(np.array(["aa", "bb", "cc"], object), n)),
+    ])
+    m = 48
+    bvalid = np.ones(m, "?")
+    bvalid[[5, 40]] = False
+    bkeys = np.where(bvalid, np.concatenate([
+        np.arange(40, dtype=np.int64),
+        np.array([3, 3, 7, 11, 55, 56, 57, 58], np.int64),
+    ]), 0).astype(np.int64)
+    bsch = schema(
+        ("key", "int64"), ("weight", "float64"), ("tag", "string"),
+        nullable=("key",),
+    )
+    build = Table(bsch, [
+        Column(bsch.field("key"), bkeys, bvalid),
+        Column(bsch.field("weight"), np.round(rng.normal(size=m), 3)),
+        Column(bsch.field("tag"),
+               rng.choice(np.array(["xx", "yy"], object), m)),
+    ])
+    return probe, build
+
+
+@pytest.fixture(scope="module", params=["flat", "striped", "split"])
+def join_store(request):
+    probe, build = _sample_tables()
+    fs = make_cluster(8)
+    for i in range(3):
+        WRITERS[request.param](
+            fs, f"/probe/part{i}.arw", probe.slice(i * 1000, 1000),
+            row_group_rows=256,
+        )
+    write_flat(fs, "/build/b0.arw", build, row_group_rows=16)
+    return fs, probe, build
+
+
+def _sorted_by(tbl: Table, name: str) -> Table:
+    order = np.argsort(tbl.column(name).values, kind="stable")
+    return tbl.take(order)
+
+
+# ---------------------------------------------------------------------------
+# the differential grid: layout x format x how x residual predicate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("with_pred", [False, True], ids=["all", "pred"])
+@pytest.mark.parametrize("how", HOWS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_join_matches_reference(join_store, fmt, how, with_pred):
+    """Byte-exact agreement with the NumPy reference across the full
+    grid — same schema (incl. nullability), validity, values, order."""
+    fs, probe, build = join_store
+    q = dataset(fs, "/probe").query(format=fmt)
+    ref_probe = probe
+    if with_pred:
+        q = q.filter(field("amt") > 12.0)
+        ref_probe = probe.filter(probe.column("amt").values > 12.0)
+    got = q.join(
+        dataset(fs, "/build").query(), on="key", how=how
+    ).to_table()
+    expected = reference_join(ref_probe, build, on="key", how=how)
+    assert_tables_equal(got, expected)
+
+
+@pytest.mark.parametrize("how", HOWS)
+def test_join_to_batches_streams_same_rows(join_store, how):
+    """Streaming emits exactly the materialized rows (batches complete
+    in any order, so compare after a stable sort on the probe id)."""
+    fs, probe, build = join_store
+    q = dataset(fs, "/probe").query(format="pushdown").join(
+        dataset(fs, "/build").query(), on="key", how=how
+    )
+    batches = list(q.to_batches())
+    got = (
+        Table.concat(batches)
+        if batches
+        else reference_join(probe.head(0), build, on="key", how=how)
+    )
+    expected = reference_join(probe, build, on="key", how=how)
+    assert_tables_equal(_sorted_by(got, "pid"), _sorted_by(expected, "pid"))
+
+
+def test_post_join_filter_select_limit(join_store):
+    """Verbs above the join (filter/select/limit) run on the joined
+    output, deterministically."""
+    fs, probe, build = join_store
+    q = (
+        dataset(fs, "/probe").query(format="pushdown")
+        .join(dataset(fs, "/build").query(), on="key", how="inner")
+        .filter(field("weight") > 0.0)
+        .select("pid", "weight")
+        .limit(40)
+    )
+    ref = reference_join(probe, build, on="key", how="inner")
+    ref = ref.filter(ref.column("weight").values > 0.0)
+    ref = ref.select(["pid", "weight"]).head(40)
+    assert_tables_equal(q.to_table(), ref)
+
+
+def test_join_build_side_projection_and_filter(join_store):
+    """A filtered, projected build side: the key column is fetched even
+    when not selected, and only selected columns join through."""
+    fs, probe, build = join_store
+    bq = (
+        dataset(fs, "/build").query()
+        .filter(field("weight") > 0.0)
+        .select("weight")
+    )
+    got = dataset(fs, "/probe").query(format="pushdown").join(
+        bq, on="key", how="inner"
+    ).to_table()
+    ref_build = build.filter(build.column("weight").values > 0.0)
+    ref_build = ref_build.select(["key", "weight"])
+    assert_tables_equal(
+        got, reference_join(probe, ref_build, on="key", how="inner")
+    )
+
+
+def test_join_on_left_right_pair():
+    """on=(left, right) with differently-named key columns; the build
+    key column never appears in the output."""
+    fs = make_cluster(4)
+    psch = schema(("pid", "int64"), ("zone", "int64"))
+    probe = Table(psch, [
+        Column(psch.field("pid"), np.arange(50, dtype=np.int64)),
+        Column(psch.field("zone"),
+               (np.arange(50, dtype=np.int64) % 7)),
+    ])
+    bsch = schema(("zid", "int64"), ("name", "string"))
+    build = Table(bsch, [
+        Column(bsch.field("zid"), np.arange(5, dtype=np.int64)),
+        Column(bsch.field("name"),
+               np.array([f"z{i}" for i in range(5)], object)),
+    ])
+    write_flat(fs, "/p/p0.arw", probe, row_group_rows=32)
+    write_flat(fs, "/b/b0.arw", build, row_group_rows=32)
+    for how in HOWS:
+        got = dataset(fs, "/p").query(format="pushdown").join(
+            dataset(fs, "/b").query(), on=("zone", "zid"), how=how
+        ).to_table()
+        expected = reference_join(probe, build, on=("zone", "zid"), how=how)
+        assert_tables_equal(got, expected)
+        assert "zid" not in got.schema.names
+
+
+def test_join_string_keys():
+    fs = make_cluster(4)
+    psch = schema(("pid", "int64"), ("tag", "string"))
+    tags = np.array(["aa", "bb", "cc", "dd", "aa", "bb"] * 20, object)
+    probe = Table(psch, [
+        Column(psch.field("pid"), np.arange(len(tags), dtype=np.int64)),
+        Column(psch.field("tag"), tags),
+    ])
+    bsch = schema(("tag", "string"), ("label", "string"))
+    build = Table(bsch, [
+        Column(bsch.field("tag"),
+               np.array(["bb", "dd", "bb", "zz"], object)),
+        Column(bsch.field("label"),
+               np.array(["B1", "D", "B2", "Z"], object)),
+    ])
+    write_flat(fs, "/p/p0.arw", probe, row_group_rows=64)
+    write_flat(fs, "/b/b0.arw", build, row_group_rows=64)
+    for how in HOWS:
+        got = dataset(fs, "/p").query(format="pushdown").join(
+            dataset(fs, "/b").query(), on="tag", how=how
+        ).to_table()
+        assert_tables_equal(
+            got, reference_join(probe, build, on="tag", how=how)
+        )
+
+
+def test_join_nan_float_keys_never_match():
+    """NaN == NaN is false in SQL join semantics: NaN keys on either
+    side match nothing (and survive only through a left join)."""
+    fs = make_cluster(4)
+    psch = schema(("pid", "int64"), ("k", "float64"))
+    pk = np.array([1.0, np.nan, 2.0, np.nan, 3.0])
+    probe = Table(psch, [
+        Column(psch.field("pid"), np.arange(5, dtype=np.int64)),
+        Column(psch.field("k"), pk),
+    ])
+    bsch = schema(("k", "float64"), ("v", "int64"))
+    build = Table(bsch, [
+        Column(bsch.field("k"), np.array([np.nan, 1.0, 3.0])),
+        Column(bsch.field("v"), np.arange(3, dtype=np.int64)),
+    ])
+    write_flat(fs, "/p/p0.arw", probe, row_group_rows=8)
+    write_flat(fs, "/b/b0.arw", build, row_group_rows=8)
+    for how in HOWS:
+        got = dataset(fs, "/p").query(format="pushdown").join(
+            dataset(fs, "/b").query(), on="k", how=how
+        ).to_table()
+        assert_tables_equal(
+            got, reference_join(probe, build, on="k", how=how)
+        )
+    semi = dataset(fs, "/p").query().join(
+        dataset(fs, "/b").query(), on="k", how="semi"
+    ).to_table()
+    assert semi.column("pid").values.tolist() == [0, 4]
+
+
+def test_join_mixed_int_widths():
+    """int32 probe key against int64 build key joins exactly."""
+    fs = make_cluster(4)
+    psch = schema(("pid", "int64"), ("k", "int32"))
+    probe = Table(psch, [
+        Column(psch.field("pid"), np.arange(100, dtype=np.int64)),
+        Column(psch.field("k"),
+               (np.arange(100) % 9).astype(np.int32)),
+    ])
+    bsch = schema(("k", "int64"), ("v", "float64"))
+    build = Table(bsch, [
+        Column(bsch.field("k"), np.array([2, 5, 5, 11], np.int64)),
+        Column(bsch.field("v"), np.array([0.5, 1.5, 2.5, 3.5])),
+    ])
+    write_flat(fs, "/p/p0.arw", probe, row_group_rows=32)
+    write_flat(fs, "/b/b0.arw", build, row_group_rows=32)
+    for how in HOWS:
+        got = dataset(fs, "/p").query(format="pushdown").join(
+            dataset(fs, "/b").query(), on="k", how=how
+        ).to_table()
+        assert_tables_equal(
+            got, reference_join(probe, build, on="k", how=how)
+        )
+
+
+def test_join_empty_sides(join_store):
+    """An all-filtered build side: inner/semi produce zero rows with the
+    full joined schema; left keeps every probe row with all-null build
+    columns.  An all-filtered probe side produces zero rows."""
+    fs, probe, build = join_store
+    empty_build = build.filter(np.zeros(len(build), "?"))
+    for how in HOWS:
+        got = dataset(fs, "/probe").query(format="pushdown").join(
+            dataset(fs, "/build").query().filter(field("weight") > 1e9),
+            on="key", how=how,
+        ).to_table()
+        assert_tables_equal(
+            got, reference_join(probe, empty_build, on="key", how=how)
+        )
+    empty_probe = probe.filter(np.zeros(len(probe), "?"))
+    for how in HOWS:
+        got = dataset(fs, "/probe").query(format="pushdown").filter(
+            field("amt") > 1e9
+        ).join(dataset(fs, "/build").query(), on="key", how=how).to_table()
+        assert_tables_equal(
+            got, reference_join(empty_probe, build, on="key", how=how)
+        )
+
+
+def test_join_duplicate_keys_exact_order():
+    """Pinned tiny case: probe rows keep scan order, and a probe row's
+    matches come out in build-row order."""
+    fs = make_cluster(4)
+    psch = schema(("pid", "int64"), ("k", "int64"))
+    probe = Table(psch, [
+        Column(psch.field("pid"), np.arange(5, dtype=np.int64)),
+        Column(psch.field("k"), np.array([7, 3, 3, 9, 7], np.int64)),
+    ])
+    bsch = schema(("k", "int64"), ("v", "int64"))
+    build = Table(bsch, [
+        Column(bsch.field("k"), np.array([3, 7, 3], np.int64)),
+        Column(bsch.field("v"), np.array([10, 20, 30], np.int64)),
+    ])
+    write_flat(fs, "/p/p0.arw", probe, row_group_rows=8)
+    write_flat(fs, "/b/b0.arw", build, row_group_rows=8)
+    got = dataset(fs, "/p").query(format="pushdown").join(
+        dataset(fs, "/b").query(), on="k", how="inner"
+    ).to_table()
+    assert got.column("pid").values.tolist() == [0, 1, 1, 2, 2, 4]
+    assert got.column("v").values.tolist() == [20, 10, 30, 10, 30, 20]
+    assert_tables_equal(
+        got, reference_join(probe, build, on="k", how="inner")
+    )
+
+
+def test_probe_limit_join_is_subset():
+    """A probe-side limit means "any n probe rows" — the joined output
+    must still be a duplicate-free subset of the unlimited join."""
+    probe, build = _sample_tables()
+    fs = make_cluster(8)
+    write_flat(fs, "/p/p0.arw", probe, row_group_rows=256)
+    write_flat(fs, "/b/b0.arw", build, row_group_rows=64)
+    q = dataset(fs, "/p").query(format="pushdown").limit(50).join(
+        dataset(fs, "/b").query(), on="key", how="semi"
+    )
+    got = q.to_table()
+    full = reference_join(probe, build, on="key", how="semi")
+    pids = got.column("pid").values.tolist()
+    assert len(pids) <= 50
+    assert len(set(pids)) == len(pids)
+    assert set(pids) <= set(full.column("pid").values.tolist())
+
+
+# ---------------------------------------------------------------------------
+# builder validation
+# ---------------------------------------------------------------------------
+
+
+def test_join_builder_validation(join_store):
+    fs, _probe, _build = join_store
+    q = dataset(fs, "/probe").query()
+    b = dataset(fs, "/build").query()
+    with pytest.raises(TypeError):
+        q.join("not a query", on="key")
+    with pytest.raises(ValueError, match="how must be one of"):
+        q.join(b, on="key", how="outer")
+    with pytest.raises(ValueError, match="nondeterministic subset"):
+        q.join(b.limit(3), on="key")
+    with pytest.raises(ValueError, match="aggregate"):
+        q.join(b.aggregate(["count"]), on="key")
+    with pytest.raises((KeyError, ValueError)):
+        q.join(b, on="no_such_column")
+    with pytest.raises(TypeError, match="join key types differ"):
+        q.join(b, on=("key", "tag"))
+    with pytest.raises(ValueError, match="left, right"):
+        q.join(b, on=("a", "b", "c"))
+
+    joined = q.join(b, on="key")
+    with pytest.raises(ValueError, match="nested joins"):
+        joined.join(b, on="key")
+    with pytest.raises(ValueError, match="join is not supported"):
+        joined.aggregate(["count"])
+    with pytest.raises(ValueError, match="join is not supported"):
+        joined.count()
+    with pytest.raises(KeyError, match="not a join output column"):
+        joined.select("no_such_column")
+    # semi joins emit probe columns only: build columns are not
+    # selectable
+    semi = q.join(b, on="key", how="semi")
+    with pytest.raises(KeyError):
+        semi.select("weight")
+    # the clash-renamed build column IS selectable on inner/left
+    assert joined.select("pid", "tag_right") is not joined
+    with pytest.raises(ValueError, match="join plans lower per side"):
+        joined.physical_plan()
+
+
+# ---------------------------------------------------------------------------
+# pushdown strategy selection + selectivity hint
+# ---------------------------------------------------------------------------
+
+
+def _keyed_store(n_probe, build_sizes):
+    fs = make_cluster(4)
+    psch = schema(("pid", "int64"), ("k", "int64"))
+    probe = Table(psch, [
+        Column(psch.field("pid"), np.arange(n_probe, dtype=np.int64)),
+        Column(psch.field("k"), np.arange(n_probe, dtype=np.int64)),
+    ])
+    write_flat(fs, "/p/p0.arw", probe, row_group_rows=256)
+    bsch = schema(("k", "int64"),)
+    for name, m in build_sizes.items():
+        build = Table(
+            bsch, [Column(bsch.field("k"), np.arange(m, dtype=np.int64))]
+        )
+        write_flat(fs, f"/{name}/b0.arw", build, row_group_rows=4096)
+    return fs, probe
+
+
+def test_strategy_inlist_bloom_boundary():
+    """<= IN_LIST_MAX distinct keys push an exact IN-list; one more key
+    switches to a bloom filter — and both stay byte-exact (bloom false
+    positives die at the client's exact membership check)."""
+    fs, probe = _keyed_store(
+        600, {"small": IN_LIST_MAX, "big": IN_LIST_MAX + 1}
+    )
+    q_small = dataset(fs, "/p").query(format="pushdown").join(
+        dataset(fs, "/small").query(), on="k", how="semi"
+    )
+    _plan, ctx, _bq, _post = q_small._prepare_join()
+    s = ctx.strategy
+    assert s.pushdown == "inlist"
+    assert isinstance(s.key_filter, IsIn)
+    assert s.distinct_keys == IN_LIST_MAX
+    assert s.selectivity_hint == pytest.approx(IN_LIST_MAX / 600)
+
+    q_big = dataset(fs, "/p").query(format="pushdown").join(
+        dataset(fs, "/big").query(), on="k", how="semi"
+    )
+    _plan, ctx, _bq, _post = q_big._prepare_join()
+    s = ctx.strategy
+    assert s.pushdown == "bloom"
+    assert isinstance(s.key_filter, BloomIn)
+    assert s.key_filter.count == IN_LIST_MAX + 1
+    # both run byte-exact
+    bsch = schema(("k", "int64"),)
+    for path, m in (("/small", IN_LIST_MAX), ("/big", IN_LIST_MAX + 1)):
+        build = Table(
+            bsch, [Column(bsch.field("k"), np.arange(m, dtype=np.int64))]
+        )
+        got = dataset(fs, "/p").query(format="pushdown").join(
+            dataset(fs, path).query(), on="k", how="semi"
+        ).to_table()
+        assert_tables_equal(
+            got, reference_join(probe, build, on="k", how="semi")
+        )
+
+
+def test_strategy_opt_outs():
+    """Left joins and probe-side limits run the probe unfiltered."""
+    fs, _probe = _keyed_store(100, {"b": 10})
+    left = dataset(fs, "/p").query().join(
+        dataset(fs, "/b").query(), on="k", how="left"
+    )
+    _plan, ctx, _bq, _post = left._prepare_join()
+    assert ctx.strategy.pushdown == "none"
+    assert ctx.strategy.reason == "left join keeps every probe row"
+    assert ctx.strategy.key_filter is None
+
+    limited = dataset(fs, "/p").query().limit(7).join(
+        dataset(fs, "/b").query(), on="k", how="semi"
+    )
+    _plan, ctx, _bq, _post = limited._prepare_join()
+    assert ctx.strategy.pushdown == "none"
+    assert (
+        ctx.strategy.reason
+        == "probe-side limit pins pre-join row selection"
+    )
+
+
+def test_selectivity_hint_threads_to_tasks_and_pricing():
+    """The hint rides every probe task and shrinks the scheduler's
+    storage-side wire estimate (cheaper reply -> storage looks better),
+    without entering the cache key."""
+    fs, _probe = _keyed_store(1000, {"b": 10})
+    q = dataset(fs, "/p").query(format="adaptive").join(
+        dataset(fs, "/b").query(), on="k", how="semi"
+    )
+    plan, ctx, _bq, _post = q._prepare_join()
+    hint = ctx.strategy.selectivity_hint
+    assert hint == pytest.approx(10 / 1000)
+    assert plan.tasks and all(
+        t.selectivity_hint == hint for t in plan.tasks
+    )
+
+    sched = ScanScheduler(fs)
+    sched._out_ratio.update(1.0)
+    sched._decode_rate.update(100e6)
+    frag = dataset(fs, "/p").fragments()[0]
+    plain = sched.estimate(frag)
+    hinted = sched.estimate(frag, selectivity_hint=0.01)
+    assert hinted.est_osd_s < plain.est_osd_s
+
+
+def test_pushdown_cuts_probe_wire_bytes():
+    """The whole point: with a selective build side, the probe ships a
+    fraction of the unfiltered scan's bytes, and the build-side scan is
+    accounted separately so the comparison is honest."""
+    probe, build = _sample_tables()
+    fs = make_cluster(8)
+    for i in range(3):
+        write_striped(fs, f"/p/part{i}.arw", probe.slice(i * 1000, 1000),
+                      row_group_rows=256)
+    bsch = schema(("key", "int64"),)
+    small = Table(
+        bsch, [Column(bsch.field("key"), np.array([3, 11, 42], np.int64))]
+    )
+    write_flat(fs, "/b/b0.arw", small, row_group_rows=64)
+    q = dataset(fs, "/p").query(format="pushdown").join(
+        dataset(fs, "/b").query(), on="key", how="semi"
+    )
+    got = q.to_table()
+    assert_tables_equal(
+        got, reference_join(probe, small, on="key", how="semi")
+    )
+    assert q.metrics.build is not None
+    assert q.metrics.build.rows == len(small)
+
+    full = dataset(fs, "/p").query(format="pushdown")
+    full.to_table()
+    assert q.metrics.wire_bytes < 0.5 * full.metrics.wire_bytes
+
+
+# ---------------------------------------------------------------------------
+# explain(): golden join plans
+# ---------------------------------------------------------------------------
+
+
+def _golden_store():
+    fs = make_cluster(4)
+    sch = schema(("k", "int64"), ("v", "float64"))
+    for i, lo in enumerate((0, 100)):
+        t = Table(sch, [
+            Column(sch.field("k"),
+                   np.arange(lo, lo + 10, dtype=np.int64)),
+            Column(sch.field("v"), np.linspace(0.0, 1.0, 10)),
+        ])
+        write_flat(fs, f"/g/part{i}.arw", t, row_group_rows=16)
+    bsch = schema(("k", "int64"),)
+    write_flat(
+        fs, "/gb/b0.arw",
+        Table(bsch,
+              [Column(bsch.field("k"), np.array([2, 3, 5], np.int64))]),
+        row_group_rows=16,
+    )
+    write_flat(
+        fs, "/gbig/b0.arw",
+        Table(bsch,
+              [Column(bsch.field("k"), np.arange(300, dtype=np.int64))]),
+        row_group_rows=512,
+    )
+    return fs
+
+
+def test_explain_inlist_join_golden():
+    fs = _golden_store()
+    txt = dataset(fs, "/g").query(format="pushdown").join(
+        dataset(fs, "/gb").query(), on="k", how="semi"
+    ).explain()
+    lines = txt.splitlines()
+    assert any(line.strip() == "Join[semi, k = k]" for line in lines)
+    assert "build:" in txt
+    assert (
+        "- strategy: hash semi join on k = k; build side 3 rows, "
+        "3 distinct keys" in lines
+    )
+    assert (
+        "- semijoin-pushdown: IN-list(3 keys) conjoined into probe scan "
+        "(selectivity hint 0.1500)" in lines
+    )
+    # part1 (k in 100..109) is provably disjoint from the pushed
+    # IN-list: pruned client-side from footer stats, never scanned
+    assert any(
+        line.startswith("  [-] pruned /g/part1.arw#0") for line in lines
+    )
+    task_lines = [ln for ln in lines if ln.lstrip().startswith("[0]")]
+    assert task_lines and "/g/part0.arw" in task_lines[0]
+    assert all("/g/part1.arw" not in ln for ln in task_lines)
+
+
+def test_explain_bloom_join_golden():
+    fs = _golden_store()
+    txt = dataset(fs, "/g").query(format="pushdown").join(
+        dataset(fs, "/gbig").query(), on="k", how="inner"
+    ).explain()
+    assert (
+        "- strategy: hash inner join on k = k; build side 300 rows, "
+        "300 distinct keys" in txt
+    )
+    assert "- semijoin-pushdown: bloom(" in txt
+    assert "digest=" in txt
+    assert "(selectivity hint 1.0000)" in txt
+
+
+def test_explain_left_join_golden():
+    fs = _golden_store()
+    txt = dataset(fs, "/g").query(format="pushdown").join(
+        dataset(fs, "/gb").query(), on="k", how="left"
+    ).explain()
+    assert (
+        "- semijoin-pushdown: none (left join keeps every probe row)"
+        in txt
+    )
+    txt = dataset(fs, "/g").query(format="pushdown").limit(5).join(
+        dataset(fs, "/gb").query(), on="k", how="semi"
+    ).explain()
+    assert (
+        "- semijoin-pushdown: none (probe-side limit pins pre-join row "
+        "selection)" in txt
+    )
+
+
+# ---------------------------------------------------------------------------
+# storage-side row-group skip for pushed key filters
+# ---------------------------------------------------------------------------
+
+
+def test_scan_op_stats_skip_row_groups(monkeypatch):
+    """A pushed key filter lets ``scan_op`` skip decoding row groups
+    whose footer stats prove zero matches — only the two groups holding
+    the keys are touched out of eight."""
+    from repro.aformat import parquet
+
+    fs = make_cluster(4)
+    sch = schema(("k", "int64"),)
+    t = Table(
+        sch, [Column(sch.field("k"), np.arange(1024, dtype=np.int64))]
+    )
+    write_flat(fs, "/skip/p0.arw", t, row_group_rows=128)
+    name = fs.object_names("/skip/p0.arw")[0]
+
+    decoded = []
+    real = parquet.scan_row_group
+
+    def counting(src, meta, rg, columns, predicate=None):
+        decoded.append(rg)
+        return real(src, meta, rg, columns, predicate)
+
+    monkeypatch.setattr(parquet, "scan_row_group", counting)
+    payload = {"predicate": IsIn("k", (5, 200)).to_json()}
+    raw, _osd, _el = fs.store.cls_call(name, "scan_op", payload)
+    out = Table.from_ipc(raw)
+    assert sorted(out.column("k").values.tolist()) == [5, 200]
+    assert len(decoded) == 2  # rgs [0,127] and [128,255]; six skipped
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+
+def _warm_to_storage(fmt: AdaptiveFormat, fs):
+    """Teach the scheduler a selective history so placement goes to the
+    storage node (mirrors test_scheduler's warm-up idiom)."""
+    sched = fmt.scheduler_for(fs)
+    sched._out_ratio.update(0.05)
+    sched._decode_rate.update(150e6)
+    return sched
+
+
+def test_probe_osd_down_falls_back_cleanly():
+    """The probe-side scan service dying mid-join must not surface
+    partial rows: every storage-placed task falls back to a client read
+    of the same fragment, and the result stays byte-exact."""
+    probe, build = _sample_tables()
+    fs = make_cluster(8)
+    for i in range(3):
+        write_striped(fs, f"/p/part{i}.arw", probe.slice(i * 1000, 1000),
+                      row_group_rows=256)
+    write_flat(fs, "/b/b0.arw", build, row_group_rows=64)
+
+    def dying_scan(obj, payload):
+        raise OSDDownError("scan service down")
+
+    fs.store.register_cls("scan_op", dying_scan)
+    fmt = AdaptiveFormat()
+    _warm_to_storage(fmt, fs)
+    q = dataset(fs, "/p").query(format=fmt).join(
+        dataset(fs, "/b").query(format="parquet"), on="key", how="semi"
+    )
+    got = q.to_table()
+    assert_tables_equal(
+        got, reference_join(probe, build, on="key", how="semi")
+    )
+    stats = fmt.stats()
+    # storage WAS attempted (the warmed estimate picked the OSD), and
+    # every one of those attempts failed over to a client read
+    assert stats["fallbacks"] > 0
+    assert stats["fallbacks"] == stats["decisions"]["client"]
+    assert stats["decisions"]["osd"] == 0
+
+
+def test_hedged_build_side_first_reply_wins_once():
+    """A pathological straggler on the build object's primary: hedging
+    re-issues against a replica, the first reply wins, and the joined
+    output is byte-exact — no duplicated or dropped build rows."""
+    probe, build = _sample_tables()
+    fs = make_cluster(8)
+    write_flat(fs, "/p/p0.arw", probe.slice(0, 1000), row_group_rows=256)
+    write_flat(fs, "/b/b0.arw", build, row_group_rows=16)
+    name = fs.object_names("/b/b0.arw")[0]
+    fs.store.primary_of(name).straggle_factor = 1e6
+
+    q = dataset(fs, "/p").query(format="parquet").join(
+        dataset(fs, "/b").query(
+            format=PushdownParquetFormat(hedge_threshold_s=0.002)
+        ),
+        on="key", how="inner",
+    )
+    got = q.to_table()
+    assert_tables_equal(
+        got,
+        reference_join(probe.slice(0, 1000), build, on="key", how="inner"),
+    )
+    assert q.metrics.build is not None
+    assert q.metrics.build.hedged_tasks >= 1
+
+
+def test_semi_join_cache_invalidated_by_version_bump():
+    """Result-cache keys carry object versions and the pushed filter's
+    digest: a warm repeat hits, append() exposes new rows immediately,
+    and compact() (which rewrites objects) never serves stale entries."""
+    probe, build = _sample_tables()
+    fs = make_cluster(8)
+    md = MutableDataset.create(fs, "/mut")
+    md.append(probe.slice(0, 1000), row_group_rows=256)
+    write_flat(fs, "/b/b0.arw", build, row_group_rows=64)
+    fmt = AdaptiveFormat()
+    _warm_to_storage(fmt, fs)
+
+    def run(expect_probe, sort=False):
+        q = md.as_of().query(format=fmt).join(
+            dataset(fs, "/b").query(format="parquet"),
+            on="key", how="semi",
+        )
+        got = q.to_table()
+        expected = reference_join(expect_probe, build, on="key",
+                                  how="semi")
+        if sort:
+            got, expected = _sorted_by(got, "pid"), _sorted_by(expected,
+                                                               "pid")
+        assert_tables_equal(got, expected)
+
+    run(probe.slice(0, 1000))
+    h0 = fmt.stats()["cache"]["hits"]
+    run(probe.slice(0, 1000))
+    assert fmt.stats()["cache"]["hits"] > h0  # warm repeat hit
+
+    md.append(probe.slice(1000, 1000), row_group_rows=256)
+    run(probe.slice(0, 2000))  # new snapshot: fresh rows, exact
+
+    md.compact(target_rows=4096)
+    # rewritten objects -> new (name, version) keys; compaction may
+    # reorder rows across objects, so compare order-independently
+    run(probe.slice(0, 2000), sort=True)
+
+
+def test_cache_keys_distinguish_pushed_key_filters():
+    """Two different build sides push different (digest-keyed) filters:
+    the second join must not be served from the first one's cache."""
+    fs, probe = _keyed_store(600, {})
+    bsch = schema(("k", "int64"),)
+    evens = Table(
+        bsch,
+        [Column(bsch.field("k"),
+                np.arange(0, 600, 2, dtype=np.int64))],
+    )
+    odds = Table(
+        bsch,
+        [Column(bsch.field("k"),
+                np.arange(1, 600, 2, dtype=np.int64))],
+    )
+    write_flat(fs, "/be/b0.arw", evens, row_group_rows=1024)
+    write_flat(fs, "/bo/b0.arw", odds, row_group_rows=1024)
+    fmt = AdaptiveFormat()
+    _warm_to_storage(fmt, fs)
+    for path, build in (("/be", evens), ("/bo", odds), ("/be", evens)):
+        got = dataset(fs, "/p").query(format=fmt).join(
+            dataset(fs, path).query(format="parquet"),
+            on="k", how="semi",
+        ).to_table()
+        assert_tables_equal(
+            got, reference_join(probe, build, on="k", how="semi")
+        )
+
+
+# ---------------------------------------------------------------------------
+# property-based differential test (skips when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+
+def test_join_property_random_tables():
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    key = st.one_of(st.none(), st.integers(0, 12))
+
+    def make(keys, prefix):
+        sch = schema((f"{prefix}id", "int64"), ("k", "int64"),
+                     nullable=("k",))
+        valid = np.array([k is not None for k in keys], "?")
+        vals = np.array([k if k is not None else 0 for k in keys],
+                        np.int64)
+        return Table(sch, [
+            Column(sch.field(f"{prefix}id"),
+                   np.arange(len(keys), dtype=np.int64)),
+            Column(sch.field("k"), vals, valid),
+        ])
+
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(
+        pkeys=st.lists(key, min_size=1, max_size=40),
+        bkeys=st.lists(key, min_size=1, max_size=30),
+        how=st.sampled_from(HOWS),
+    )
+    def check(pkeys, bkeys, how):
+        fs = make_cluster(4)
+        probe, build = make(pkeys, "p"), make(bkeys, "b")
+        write_flat(fs, "/p/p0.arw", probe, row_group_rows=16)
+        write_flat(fs, "/b/b0.arw", build, row_group_rows=16)
+        got = dataset(fs, "/p").query(format="pushdown").join(
+            dataset(fs, "/b").query(), on="k", how=how
+        ).to_table()
+        assert_tables_equal(
+            got, reference_join(probe, build, on="k", how=how)
+        )
+
+    check()
