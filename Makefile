@@ -4,8 +4,8 @@ PYTHON ?= python
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-fast test-cov lint bench bench-adaptive bench-aggregate \
-	bench-compact bench-fig5 bench-fig6 bench-hedged bench-join \
-	bench-limit bench-smoke deps
+	bench-compact bench-decode bench-fig5 bench-fig6 bench-hedged \
+	bench-join bench-limit bench-smoke deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -22,7 +22,7 @@ test-fast:
 # layers fails here
 test-cov:
 	$(PYTHON) -m pytest -q -m "not slow" \
-		--cov=repro.dataset --cov=repro.aformat \
+		--cov=repro.dataset --cov=repro.aformat --cov=repro.kernels \
 		--cov-report=term-missing:skip-covered --cov-fail-under=85
 
 # ruff config lives in ruff.toml (correctness rules everywhere; the
@@ -40,7 +40,12 @@ bench-smoke:
 	$(PYTHON) benchmarks/bench_smoke.py
 
 bench: bench-fig5 bench-fig6 bench-adaptive bench-hedged bench-aggregate \
-	bench-limit bench-compact bench-join
+	bench-limit bench-compact bench-join bench-decode
+
+# client decode plane: NumPy vs Pallas backends (byte-identity, roofline
+# rates, placement-crossover shift)
+bench-decode:
+	$(PYTHON) benchmarks/decode_backend.py
 
 bench-aggregate:
 	$(PYTHON) benchmarks/aggregate_pushdown.py

@@ -99,6 +99,34 @@ def run_semi_join_small() -> dict:
     return out
 
 
+def run_decode_backend_small() -> dict:
+    from benchmarks import decode_backend
+    # small config: the interpret-mode Pallas scans dominate the wall;
+    # 40k rows still cover every kernel/fallback route and the sweep
+    decode_backend.ROWS = 40_000
+    t0 = time.perf_counter()
+    out = decode_backend.run()
+    out["wall_s"] = time.perf_counter() - t0
+    out["claims"] = decode_backend.check_claims(out)
+    out["small_config"] = True
+    return out
+
+
+def run_kernels() -> dict:
+    from benchmarks import kernel_bench
+    t0 = time.perf_counter()
+    out = {
+        "predicate_fused": kernel_bench.bench_predicate(),
+        "dict_decode": kernel_bench.bench_dict(),
+        "token_pack": kernel_bench.bench_pack(),
+    }
+    out["wall_s"] = time.perf_counter() - t0
+    out["claims"] = [
+        f"{'PASS' if v['allclose'] else 'FAIL'}  {k} matches its oracle"
+        for k, v in out.items() if isinstance(v, dict)]
+    return out
+
+
 BENCHES = {
     "hedged_straggler": run_hedged_straggler,
     "adaptive_scan": run_adaptive_scan_small,
@@ -106,6 +134,8 @@ BENCHES = {
     "limit_pushdown": run_limit_pushdown_small,
     "compaction": run_compaction_small,
     "semi_join": run_semi_join_small,
+    "decode_backend": run_decode_backend_small,
+    "kernels": run_kernels,
 }
 
 

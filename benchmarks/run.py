@@ -11,15 +11,17 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (adaptive_scan, compaction, fig5_latency_scaling,
-                        fig6_cpu_utilization, ingest_train, kernel_bench,
-                        layout_compare, semi_join)
+from benchmarks import (adaptive_scan, compaction, decode_backend,
+                        fig5_latency_scaling, fig6_cpu_utilization,
+                        ingest_train, kernel_bench, layout_compare,
+                        semi_join)
 
 BENCHES = {
     "fig5": fig5_latency_scaling.main,
     "fig6": fig6_cpu_utilization.main,
     "layout": layout_compare.main,
     "kernels": kernel_bench.main,
+    "decode_backend": decode_backend.main,
     "ingest": ingest_train.main,
     "adaptive": adaptive_scan.main,
     "compaction": compaction.main,

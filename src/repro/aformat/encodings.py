@@ -4,15 +4,22 @@ Each encoder maps a values array -> list of raw buffers; the footer records
 which encoding was used.  The *decode* cost of these encodings (plus the
 codec) is exactly the client-CPU work the paper offloads to storage.
 
-Hardware-adaptation note (DESIGN.md §2): DICTIONARY and DELTA decode are
-data-parallel (gather / prefix-sum) and transfer to the TPU as Pallas
-kernels (repro.kernels).  RLE run expansion is variable-length sequential
-and stays on the host path — documented as the non-transferable piece.
+Hardware-adaptation note (DESIGN.md §2): DICTIONARY decode *is* wired to
+the TPU — ``repro.aformat.decode.PallasBackend`` routes DICT chunks
+through the ``repro.kernels`` gather kernel (with predicate fusion and
+selection packing) whenever a scan runs with ``decode_backend="pallas"``.
+The byte-stream pieces stay here on the host path by design: RLE run
+expansion is variable-length sequential, and DELTA's int8 delta stream
+plus the string offset/payload buffers are decoded faster on the host
+than they could be staged onto an accelerator — the documented
+non-transferable remainder the Pallas backend falls back to per column.
 """
 
 from __future__ import annotations
 
 import numpy as np
+
+from repro.aformat.table import strings_from_buffers
 
 PLAIN, DICT, RLE, DELTA, BITPACK = "plain", "dict", "rle", "delta", "bitpack"
 
@@ -25,12 +32,8 @@ def _string_buffers(values) -> list[bytes]:
 
 
 def _string_from_buffers(bufs, n):
-    offsets = np.frombuffer(bufs[0], np.int64)
-    payload = bufs[1]
-    out = np.empty(n, object)
-    for i in range(n):
-        out[i] = payload[offsets[i]:offsets[i + 1]].decode()
-    return out
+    return strings_from_buffers(np.frombuffer(bufs[0], np.int64),
+                                bufs[1], n)
 
 
 def choose_encoding(field_type: str, values: np.ndarray) -> str:
@@ -111,13 +114,13 @@ def decode(field_type: str, encoding: str, bufs: list[bytes], n: int,
         return uniq[idx]
     if encoding == DELTA:
         base = np.frombuffer(bufs[0], np.int64)
-        deltas = np.frombuffer(bufs[1], np.int8).astype(np.int64)
         out = np.empty(n, np.int64)
         if n:
             out[0] = base[0]
-            np.cumsum(deltas, out=out[1:]) if n > 1 else None
-            if n > 1:
-                out[1:] += base[0]
+        if n > 1:
+            deltas = np.frombuffer(bufs[1], np.int8).astype(np.int64)
+            np.cumsum(deltas[:n - 1], out=out[1:])
+            out[1:] += base[0]
         return out.astype(numpy_dtype)
     if encoding == RLE:
         vals = np.frombuffer(bufs[0], numpy_dtype)

@@ -25,6 +25,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.aformat import compression, encodings
+from repro.aformat import decode as decode_mod
 from repro.aformat.schema import Schema
 from repro.aformat.statistics import ColumnStats, compute_stats
 from repro.aformat.table import Column, Table
@@ -203,55 +204,31 @@ def read_footer(src: RandomAccessSource) -> FileMeta:
 
 
 def read_column(src: RandomAccessSource, meta: FileMeta, rg: RowGroupMeta,
-                name: str) -> Column:
-    field = meta.schema.field(name)
-    idx = meta.schema.index(name)
-    chunk = rg.chunks[idx]
-    bufs = []
-    off = chunk.offset
-    for ln in chunk.buffer_lengths:
-        bufs.append(compression.decompress(chunk.codec, src.read(off, ln)))
-        off += ln
-    n = rg.num_rows
-    n_data = _n_data_buffers(field.type, chunk.encoding)
-    values = encodings.decode(field.type, chunk.encoding, bufs[:n_data], n,
-                              field.numpy_dtype)
-    validity = None
-    if len(bufs) > n_data:
-        validity = np.unpackbits(
-            np.frombuffer(bufs[n_data], np.uint8))[:n].astype("?")
-    return Column(field, values, validity)
+                name: str, backend=None) -> Column:
+    """Decode one column chunk through a decode backend (host by
+    default — see ``repro.aformat.decode``)."""
+    return decode_mod.resolve_backend(backend).decode_column(
+        decode_mod.read_chunk(src, meta, rg, name))
 
 
 def _n_data_buffers(field_type: str, encoding: str) -> int:
-    if encoding == encodings.PLAIN:
-        return 2 if field_type == "string" else 1
-    if encoding == encodings.DICT:
-        return 3 if field_type == "string" else 2
-    if encoding in (encodings.DELTA, encodings.RLE):
-        return 2
-    return 1  # bitpack
+    # kept as an alias: the layout rule moved to the decode-engine layer
+    return decode_mod.n_data_buffers(field_type, encoding)
 
 
 def scan_row_group(src: RandomAccessSource, meta: FileMeta, rg: RowGroupMeta,
                    columns: Sequence[str] | None = None,
-                   predicate=None) -> Table:
-    """Decode + filter + project one row group (the scan_op payload)."""
-    names = list(columns) if columns is not None else meta.schema.names
-    needed = set(names)
-    if predicate is not None:
-        needed |= predicate.columns()
-    cols = {n: read_column(src, meta, rg, n) for n in needed}
-    tbl_all = Table(meta.schema.select(sorted(needed, key=meta.schema.index)),
-                    [cols[n] for n in sorted(needed, key=meta.schema.index)])
-    if predicate is not None:
-        mask = predicate.evaluate(tbl_all)
-        tbl_all = tbl_all.filter(mask)
-    return tbl_all.select(names)
+                   predicate=None, backend=None) -> Table:
+    """Decode + filter + project one row group (the scan_op payload).
+    ``backend`` picks the decode engine (None -> the NumPy host path;
+    "pallas" routes DICT decode / predicate / selection through the
+    ``repro.kernels`` Pallas ops with per-column host fallback)."""
+    return decode_mod.resolve_backend(backend).scan_row_group(
+        src, meta, rg, columns, predicate)
 
 
 def scan_file(src: RandomAccessSource, columns=None, predicate=None,
-              meta: FileMeta | None = None) -> Table:
+              meta: FileMeta | None = None, backend=None) -> Table:
     """Whole-file scan with row-group pruning (predicate pushdown)."""
     from repro.aformat.expressions import ALL, NONE
 
@@ -265,7 +242,8 @@ def scan_file(src: RandomAccessSource, columns=None, predicate=None,
             pred = None if verdict == ALL else predicate
         else:
             pred = None
-        parts.append(scan_row_group(src, meta, rg, columns, pred))
+        parts.append(scan_row_group(src, meta, rg, columns, pred,
+                                    backend=backend))
     if not parts:
         names = list(columns) if columns is not None else meta.schema.names
         sch = meta.schema.select(names)

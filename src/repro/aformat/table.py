@@ -26,11 +26,32 @@ def _to_string_buffers(arr) -> tuple[np.ndarray, bytes]:
     return offsets, b"".join(vals)
 
 
-def _from_string_buffers(offsets: np.ndarray, payload: bytes) -> np.ndarray:
-    out = np.empty(len(offsets) - 1, object)
-    for i in range(len(offsets) - 1):
-        out[i] = payload[offsets[i]:offsets[i + 1]].decode("utf-8")
+def strings_from_buffers(offsets: np.ndarray, payload: bytes,
+                         n: int) -> np.ndarray:
+    """Arrow-style (byte offsets, UTF-8 payload) -> (n,) object array of
+    str.  The payload is decoded *once* and sliced by character offsets —
+    equal to the byte offsets for pure-ASCII payloads (the common case),
+    otherwise mapped through a vectorized count of UTF-8 continuation
+    bytes — instead of one ``bytes.decode`` call per row."""
+    out = np.empty(n, object)
+    if n == 0:
+        return out
+    text = payload.decode("utf-8")
+    if len(text) == len(payload):          # ASCII: offsets line up 1:1
+        char_off = offsets
+    else:
+        lead = (np.frombuffer(payload, np.uint8) & 0xC0) != 0x80
+        cum = np.zeros(len(payload) + 1, np.int64)
+        np.cumsum(lead, out=cum[1:])
+        char_off = cum[np.asarray(offsets[:n + 1], np.int64)]
+    starts = char_off[:n].tolist()
+    ends = char_off[1:n + 1].tolist()
+    out[:] = [text[s:e] for s, e in zip(starts, ends)]
     return out
+
+
+def _from_string_buffers(offsets: np.ndarray, payload: bytes) -> np.ndarray:
+    return strings_from_buffers(offsets, payload, len(offsets) - 1)
 
 
 @dataclasses.dataclass

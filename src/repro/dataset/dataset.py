@@ -64,25 +64,36 @@ class Dataset:
         return sum(f.num_rows for f in self._fragments)
 
     def query(self, *, format: FileFormat | str = "pushdown",
-              num_threads: int = 16, queue_depth: int = 4) -> Query:
+              num_threads: int = 16, queue_depth: int = 4,
+              decode_backend=None) -> Query:
         """Start a lazy query: ``ds.query().select(...).filter(...)
         .limit(n)`` / ``.aggregate(...)`` / ``.count()``, executed via
         ``to_table`` / ``to_batches`` / ``to_scalar`` and inspectable via
         ``explain()``.  ``format`` picks the placement exactly as in
-        :meth:`scanner`."""
+        :meth:`scanner`; ``decode_backend`` picks the client-side decode
+        engine (None/"numpy" for the host path, "pallas" for the
+        ``repro.kernels`` accelerator ops) for the "parquet" and
+        "adaptive" formats."""
         return Query(self, format=format, num_threads=num_threads,
-                     queue_depth=queue_depth)
+                     queue_depth=queue_depth,
+                     decode_backend=decode_backend)
 
     def scanner(self, *, format: FileFormat | str = "pushdown",
                 columns: Sequence[str] | None = None,
                 predicate: Expr | None = None,
-                num_threads: int = 16, queue_depth: int = 4) -> "Scanner":
+                num_threads: int = 16, queue_depth: int = 4,
+                decode_backend=None) -> "Scanner":
         """Build a Scanner.  ``format`` is a FileFormat instance or one of
         "parquet" (client-side), "pushdown" (storage-side), "adaptive"
         (scheduler-placed; pass an ``AdaptiveFormat`` instance instead to
-        keep its result cache warm across scans)."""
-        return Scanner(self, resolve_format(format), columns, predicate,
-                       num_threads=num_threads, queue_depth=queue_depth)
+        keep its result cache warm across scans).  ``decode_backend``
+        picks the client-side decode engine exactly as in
+        :meth:`query`."""
+        return Scanner(self,
+                       resolve_format(format,
+                                      decode_backend=decode_backend),
+                       columns, predicate, num_threads=num_threads,
+                       queue_depth=queue_depth)
 
 
 def _footer_tail_bytes(fs: CephFS, path: str) -> tuple[parquet.FileMeta, int]:

@@ -23,6 +23,7 @@ import threading
 import time
 from typing import Any, Sequence
 
+from repro.aformat import decode as decode_mod
 from repro.aformat import parquet
 from repro.aformat.aggregate import (AggSpec, AggState, DEFAULT_MAX_GROUPS,
                                      needed_columns, partial_aggregate)
@@ -108,15 +109,34 @@ class FileFormat:
         return f"placement={self.name}"
 
 
-def resolve_format(format: "FileFormat | str") -> "FileFormat":
+def resolve_format(format: "FileFormat | str",
+                   decode_backend=None) -> "FileFormat":
     """Resolve the Scanner/Query ``format`` argument: a FileFormat
     instance passes through; a known name constructs a fresh instance; an
-    unknown value raises a ValueError naming the choices."""
+    unknown value raises a ValueError naming the choices.
+
+    ``decode_backend`` (None / "numpy" / "pallas" / a DecodeBackend)
+    picks the *client-side* decode engine: it configures the constructed
+    ``ParquetFormat`` or ``AdaptiveFormat`` (whose storage side always
+    runs the host path — OSDs have no accelerator).  It cannot be
+    combined with an already-built instance or with the pure
+    storage-side "pushdown" format."""
     if isinstance(format, FileFormat):
+        if decode_backend is not None:
+            raise ValueError(
+                "decode_backend= cannot reconfigure an existing FileFormat "
+                "instance; pass it to the format's constructor instead")
         return format
     choices = {"parquet": ParquetFormat, "pushdown": PushdownParquetFormat,
                "adaptive": AdaptiveFormat}
     if isinstance(format, str) and format in choices:
+        if decode_backend is not None:
+            if format == "pushdown":
+                raise ValueError(
+                    "decode_backend= does not apply to format='pushdown': "
+                    "scan_op decodes on the storage node, which keeps the "
+                    "host (numpy) path")
+            return choices[format](decode_backend=decode_backend)
         return choices[format]()
     raise ValueError(
         f"unknown format {format!r}: pass one of "
@@ -168,9 +188,15 @@ def _admit_fragment(fs: CephFS, frag: Fragment, admission):
 
 class ParquetFormat(FileFormat):
     """Client-side scan: read (compressed) column chunks through CephFS,
-    decode + filter on the client."""
+    decode + filter on the client.  ``decode_backend`` picks the decode
+    engine — None/"numpy" for the host path, "pallas" to route DICT
+    decode / predicate evaluation / selection through the
+    ``repro.kernels`` accelerator ops (``repro.aformat.decode``)."""
 
     name = "parquet"
+
+    def __init__(self, *, decode_backend=None):
+        self.decode_backend = decode_mod.resolve_backend(decode_backend)
 
     def scan_fragment(self, fs, frag, columns, predicate, admission=None,
                       limit=None, selectivity_hint=None):
@@ -187,7 +213,8 @@ class ParquetFormat(FileFormat):
             if meta is None:
                 meta = parquet.read_footer(src)
             rg = meta.row_groups[frag.client_rg_index]
-            tbl = parquet.scan_row_group(src, meta, rg, columns, predicate)
+            tbl = parquet.scan_row_group(src, meta, rg, columns, predicate,
+                                         backend=self.decode_backend)
             if limit is not None:
                 # the raw chunk bytes already crossed the wire (client
                 # placement decodes whole chunks); the slice only trims
@@ -197,8 +224,25 @@ class ParquetFormat(FileFormat):
         rec = TaskRecord("client", -1, cpu, wire, cpu, len(tbl))
         return tbl, rec
 
+    def describe_backend(self, task) -> str:
+        """The decode backend's static routing for ``task``'s fragment
+        (per-column kernel-vs-host fallbacks, predicate lowering) — the
+        ``backend=`` annotation in ``explain()``.  Split-layout fragments
+        carry no client-side footer, so their per-column routing resolves
+        at scan time."""
+        frag = task.fragment
+        meta = frag.client_meta if frag.client_meta is not None \
+            else frag.footer
+        if meta is None:
+            return f"{self.decode_backend.name}(meta@scan)"
+        rg_index = frag.client_rg_index if frag.client_meta is not None \
+            else 0
+        columns = task.columns if task.kind == "scan" else None
+        return self.decode_backend.describe(
+            meta, meta.row_groups[rg_index], columns, task.predicate)
+
     def explain_task(self, fs, task):
-        return "placement=client"
+        return f"placement=client backend={self.describe_backend(task)}"
 
 
 def scan_payload(frag: Fragment, columns, predicate,
@@ -358,10 +402,20 @@ class AdaptiveFormat(FileFormat):
 
     name = "adaptive"
 
-    def __init__(self, scheduler: "Any | None" = None, **scheduler_kwargs):
+    def __init__(self, scheduler: "Any | None" = None, *,
+                 decode_backend=None, **scheduler_kwargs):
         # one scheduler per cluster: scanning dataset A then dataset B on
         # different clusters must not rebuild (and so lose) either
         # scheduler's cache and learned rates
+        if scheduler is not None and decode_backend is not None:
+            raise ValueError(
+                "pass decode_backend to the ScanScheduler constructor "
+                "when supplying a scheduler instance")
+        if decode_backend is not None:
+            # the client side of every scheduler this format builds runs
+            # this decode engine; the storage side always stays on the
+            # host path (scan_op runs on the OSD)
+            scheduler_kwargs["decode_backend"] = decode_backend
         self._schedulers: dict[int, Any] = \
             {id(scheduler.fs): scheduler} if scheduler is not None else {}
         self._kwargs = scheduler_kwargs
@@ -408,10 +462,16 @@ class AdaptiveFormat(FileFormat):
             key = sched.agg_cache_key(frag, task.specs, task.group_by,
                                       task.max_groups, task.predicate)
         cached = sched.cache.contains(key)
+        # name the decode engine each side would run: the storage side is
+        # always the host path, the client side is whatever backend the
+        # scheduler's client format carries (with its per-column
+        # kernel-vs-host routing)
+        backend = sched._client_fmt.describe_backend(task)
         return (f"placement={est.where} est_osd={est.est_osd_s * 1e3:.2f}ms "
                 f"est_client={est.est_client_s * 1e3:.2f}ms "
                 f"pressure={est.pressure:.2f} "
-                f"cached={'yes' if cached else 'no'}")
+                f"cached={'yes' if cached else 'no'} "
+                f"backend[client]={backend} backend[osd]=numpy")
 
     def stats(self) -> dict:
         """Decision/hedge/cache counters, summed across every cluster

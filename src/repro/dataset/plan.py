@@ -1064,11 +1064,12 @@ class Query:
         format="pushdown",
         num_threads: int = 16,
         queue_depth: int = 4,
+        decode_backend=None,
         _root: PlanNode | None = None,
         _scalar: bool = False,
     ):
         self.ds = ds
-        self.fmt = resolve_format(format)
+        self.fmt = resolve_format(format, decode_backend=decode_backend)
         self.num_threads = num_threads
         self.queue_depth = queue_depth
         self._root = _root if _root is not None else Scan(ds)

@@ -25,10 +25,17 @@ placement
 
     ``pressure`` comes from :meth:`ObjectStore.load_of` — straggle factor
     scaled by in-flight queue depth — minimized over the fragment's up
-    replicas (hedging can reach the fastest one).  ``decode_s`` and the
-    output-size ratio are EWMA estimates updated by *every* completed scan
-    on either side (the storage node runs the same decode code, so client
-    observations transfer).
+    replicas (hedging can reach the fastest one).  Decode rates are
+    estimated *per side*: the storage nodes always run the host (numpy)
+    decode path, while the client runs whatever ``decode_backend`` its
+    format carries (the Pallas engine is ~an order of magnitude faster
+    on an accelerator), so one shared EWMA would average two different
+    regimes into a number that prices both sides wrong.  Each side's
+    EWMA is seeded with its backend's ``decode_rate_prior``; a completed
+    scan updates its own side's estimate, and also the other side's when
+    the client runs the host (numpy) engine — the same code the OSD
+    runs, so observations transfer.  The output-size ratio is a property
+    of the data, not the backend, so it stays shared.
 
 hedging
     Storage-side scans carry a deadline of ``hedge_multiplier`` x the
@@ -79,7 +86,10 @@ from repro.storage.cephfs import CephFS, DirectObjectAccess
 from repro.storage.objstore import ObjectNotFound, OSDDownError
 
 GBE10 = 10e9 / 8                 # modeled client NIC (paper testbed)
-DEFAULT_DECODE_RATE = 150e6      # bytes/s prior until the EWMA warms up
+DEFAULT_DECODE_RATE = 150e6      # storage-side (host/numpy) bytes/s prior
+                                 # until the EWMA warms up; the client
+                                 # side is seeded from its decode
+                                 # backend's own decode_rate_prior
 DEFAULT_OUT_RATIO = 1.0          # decoded-IPC-bytes per stored-byte prior:
                                  # neutral, so the cold-start estimates tie
                                  # and the tie-break prefers storage-side
@@ -197,7 +207,8 @@ class ScanScheduler:
                  cache_bytes: int = 256 << 20,
                  hedge_multiplier: float = 3.0,
                  hedge_min_s: float = 1e-3,
-                 history: int = 256):
+                 history: int = 256,
+                 decode_backend=None):
         self.fs = fs
         self.store = fs.store
         self.doa = DirectObjectAccess(fs)
@@ -206,8 +217,15 @@ class ScanScheduler:
         self.cache = ResultCache(cache_bytes)
         self.hedge_multiplier = hedge_multiplier
         self.hedge_min_s = hedge_min_s
-        self._client_fmt = ParquetFormat()
-        self._decode_rate = _Ewma()          # bytes/s of decode+filter
+        # the client side scans through this decode engine; the storage
+        # side always runs the host path (scan_op on the OSD), so the
+        # two sides' decode rates are estimated separately, each seeded
+        # with its own backend's prior
+        self._client_fmt = ParquetFormat(decode_backend=decode_backend)
+        self._decode_rate_osd = _Ewma()      # bytes/s, storage-side host
+        self._decode_rate_client = _Ewma()   # bytes/s, client backend
+        self._client_rate_prior = \
+            self._client_fmt.decode_backend.decode_rate_prior
         self._out_ratio = _Ewma()            # ipc-out bytes per in byte
         self._osd_lat: deque[float] = deque(maxlen=history)  # s per byte
         self._lock = threading.Lock()
@@ -261,27 +279,48 @@ class ScanScheduler:
         ``selectivity_hint`` scales the learned output ratio instead when
         the caller knows the surviving-row fraction (a semi-join filter
         pushed into the scan), so the reduced reply bytes price in before
-        any EWMA history exists."""
+        any EWMA history exists.
+
+        Each side is priced with its *own* decode rate: the storage side
+        with the host-path estimate, the client side with its decode
+        backend's — a Pallas-equipped client prices its decode ~an order
+        of magnitude cheaper, so the crossover to client placement moves
+        earlier, before a single observation lands."""
         in_bytes = self._frag_bytes(frag)
-        rate = self._decode_rate.value(DEFAULT_DECODE_RATE)
-        decode_s = in_bytes / max(rate, 1.0)
+        rate_osd = self._decode_rate_osd.value(DEFAULT_DECODE_RATE)
+        rate_client = self._decode_rate_client.value(
+            self._client_rate_prior)
+        decode_osd_s = in_bytes / max(rate_osd, 1.0)
+        decode_client_s = in_bytes / max(rate_client, 1.0)
         if out_bytes is None:
             out_bytes = in_bytes * self._out_ratio.value(DEFAULT_OUT_RATIO)
             if selectivity_hint is not None:
                 out_bytes *= min(1.0, max(0.0, selectivity_hint))
         pressure = self.pressure_of(frag)
-        est_osd = max(decode_s * pressure / self.storage_threads(),
+        est_osd = max(decode_osd_s * pressure / self.storage_threads(),
                       out_bytes / self.net_bw)
         est_client = max(in_bytes / self.net_bw,
-                         decode_s / max(1, self.client_threads))
+                         decode_client_s / max(1, self.client_threads))
         where = "osd" if est_osd <= est_client else "client"
         return PlacementEstimate(where, est_osd, est_client, in_bytes,
                                  pressure)
 
-    def _observe(self, in_bytes: int, decode_s: float, out_bytes: int):
+    def _observe(self, side: str, in_bytes: int, decode_s: float,
+                 out_bytes: int):
+        """Feed one completed scan into ``side``'s decode-rate EWMA and
+        the shared output-ratio EWMA (a property of the data).  When the
+        client runs the host (numpy) engine — the same code the OSD
+        runs — the observation teaches *both* estimators; with an
+        accelerator backend the engines differ, so observations stay on
+        their own side."""
         if decode_s > 0 and in_bytes > 0:
+            rate = in_bytes / decode_s
+            host_client = self._client_fmt.decode_backend.name == "numpy"
             with self._lock:
-                self._decode_rate.update(in_bytes / decode_s)
+                if host_client or side == "osd":
+                    self._decode_rate_osd.update(rate)
+                if host_client or side == "client":
+                    self._decode_rate_client.update(rate)
                 self._out_ratio.update(out_bytes / in_bytes)
 
     def _hedge_deadline(self, in_bytes: int) -> float | None:
@@ -409,7 +448,8 @@ class ScanScheduler:
         # decode time and clipped output would teach the EWMAs that
         # fragments are cheaper/smaller than they are.
         if limit is None:
-            self._observe(est.in_bytes, el / max(sf, 1e-9), len(result))
+            self._observe("osd", est.in_bytes, el / max(sf, 1e-9),
+                          len(result))
         rec = TaskRecord("osd", osd_id, el, len(result), client_cpu,
                          len(tbl), hedged=hedged)
         return tbl, rec, result
@@ -421,12 +461,14 @@ class ScanScheduler:
         with self._lock:
             self.decisions["client"] += 1
         # both paths feed the estimators in the *same units*: stored
-        # fragment bytes in, Arrow-IPC bytes out (the storage node runs
-        # the same decode code, so observations must be interchangeable —
-        # wire bytes / raw nbytes would skew the shared EWMAs); truncated
-        # scans are excluded for the same reason as in _scan_osd
+        # fragment bytes in, Arrow-IPC bytes out — but each side updates
+        # only its own decode-rate EWMA (the client may run an
+        # accelerator decode backend the storage nodes don't have);
+        # truncated scans are excluded for the same reason as in
+        # _scan_osd
         if limit is None:
-            self._observe(self._frag_bytes(frag), rec.cpu_s, len(ipc))
+            self._observe("client", self._frag_bytes(frag), rec.cpu_s,
+                          len(ipc))
         return tbl, rec, ipc
 
     # -- aggregate pushdown -----------------------------------------------------

@@ -8,6 +8,16 @@ compute near the data is the accelerator, so the residual decode work
   dict_decode       dictionary gather (one-hot MXU matmul or VPU gather)
   token_pack        masked stream compaction to (fixed buffer, count)
 
+These are load-bearing for the storage half of the repo: the client-side
+decode engine (``repro.aformat.decode.PallasBackend``, reached through
+``decode_backend="pallas"`` on any Dataset scan) batches DICT column
+chunks through ``decode_dictionary``, lowers flat AND/OR comparison
+predicates to ``build_program``/``fused_predicate`` so mask evaluation
+fuses across columns, and compacts selections with ``pack_tokens``; the
+adaptive scheduler prices client placement with the backend's decode
+rate.  Off-accelerator the ops run ``interpret=True``, so results stay
+byte-identical to the host path (pinned by ``tests/test_decode.py``).
+
 Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
 wrapper with padding), ref.py (pure-jnp oracle for the allclose tests).
 RLE/bit-packed *byte-stream* decode is inherently sequential and stays on

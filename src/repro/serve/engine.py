@@ -103,7 +103,7 @@ def ingest_prompts(ds: "Dataset | MutableDataset", *, format="adaptive",
                    predicate=None, uid_col: str = "uid",
                    pos_col: str = "pos", token_col: str = "token",
                    max_new_tokens: int = 32, eos_id: int = -1,
-                   num_threads: int = 8):
+                   num_threads: int = 8, decode_backend=None):
     """Scan a columnar prompt store into serving Requests.
 
     The dataset holds one row per prompt token: (uid, pos, token).  The
@@ -120,8 +120,15 @@ def ingest_prompts(ds: "Dataset | MutableDataset", *, format="adaptive",
     store is snapshot-pinned up front: prompts appended (or compacted)
     while the stream runs are invisible to this ingest and land in the
     next one.  Returns (requests, scan_metrics).
+
+    ``decode_backend`` picks the client-side decode engine for the
+    ingest scan ("pallas" routes dictionary decode / filtering through
+    the accelerator kernels — a serving host *has* the accelerator, so
+    ingest is the natural consumer); it applies when ``format`` is a
+    name, not an already-built instance.
     """
-    q = _pin(ds).query(format=format, num_threads=num_threads)
+    q = _pin(ds).query(format=format, num_threads=num_threads,
+                       decode_backend=decode_backend)
     if predicate is not None:
         q = q.filter(predicate)
     q = q.select(uid_col, pos_col, token_col)
@@ -155,7 +162,8 @@ def ingest_prompts(ds: "Dataset | MutableDataset", *, format="adaptive",
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, mesh, rules, params, *,
-                 max_batch: int = 8, pad_id: int = 0):
+                 max_batch: int = 8, pad_id: int = 0,
+                 decode_backend=None):
         self.cfg = cfg
         self.ctx = ShardingCtx(mesh, rules)
         self.params = params
@@ -165,8 +173,12 @@ class ServeEngine:
         self.last_ingest_metrics = None     # ScanMetrics of the last ingest
         # one format for the engine's lifetime: its scheduler's result
         # cache and learned rates persist across ingests, so repeat
-        # ingests of hot prompt shards skip the storage tier
-        self._ingest_format = AdaptiveFormat()
+        # ingests of hot prompt shards skip the storage tier.
+        # ``decode_backend`` is the *ingest scan's* decode engine (the
+        # serving host owns the accelerator, so "pallas" makes the
+        # client-side leg of adaptive ingest cheap); it is unrelated to
+        # the token-decode step below.
+        self._ingest_format = AdaptiveFormat(decode_backend=decode_backend)
 
         cfg_ = cfg
         ctx = self.ctx

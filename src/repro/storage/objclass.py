@@ -91,6 +91,9 @@ def scan_op(obj: ObjectHandle, payload: dict) -> bytes:
             # rows is never decoded
             if predicate.prune(rg.column_stats(meta.schema)) == NONE:
                 continue
+        # storage nodes decode on the host path (default backend): an
+        # OSD has no accelerator, so the Pallas decode engine exists
+        # only behind the *client-side* formats (aformat.decode)
         part = parquet.scan_row_group(obj, meta, rg, columns, predicate)
         parts.append(part)
         rows += len(part)

@@ -516,7 +516,8 @@ def test_selectivity_hint_threads_to_tasks_and_pricing():
 
     sched = ScanScheduler(fs)
     sched._out_ratio.update(1.0)
-    sched._decode_rate.update(100e6)
+    sched._decode_rate_osd.update(100e6)
+    sched._decode_rate_client.update(100e6)
     frag = dataset(fs, "/p").fragments()[0]
     plain = sched.estimate(frag)
     hinted = sched.estimate(frag, selectivity_hint=0.01)
@@ -685,7 +686,8 @@ def _warm_to_storage(fmt: AdaptiveFormat, fs):
     storage node (mirrors test_scheduler's warm-up idiom)."""
     sched = fmt.scheduler_for(fs)
     sched._out_ratio.update(0.05)
-    sched._decode_rate.update(150e6)
+    sched._decode_rate_osd.update(150e6)
+    sched._decode_rate_client.update(150e6)
     return sched
 
 

@@ -105,7 +105,8 @@ def test_decisions_follow_pressure_estimate(flat_ds):
     frag = ds.fragments()[0]
     # teach the scheduler a selective output ratio so storage looks good
     sched._out_ratio.update(0.05)
-    sched._decode_rate.update(150e6)
+    sched._decode_rate_osd.update(150e6)
+    sched._decode_rate_client.update(150e6)
     idle = sched.estimate(frag)
     assert idle.where == "osd"
     for osd in fs.store.osds:
