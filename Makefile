@@ -5,7 +5,7 @@ export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-fast test-cov lint bench bench-adaptive bench-aggregate \
 	bench-compact bench-decode bench-fig5 bench-fig6 bench-hedged \
-	bench-join bench-limit bench-smoke deps
+	bench-join bench-limit bench-qos bench-smoke deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -40,7 +40,12 @@ bench-smoke:
 	$(PYTHON) benchmarks/bench_smoke.py
 
 bench: bench-fig5 bench-fig6 bench-adaptive bench-hedged bench-aggregate \
-	bench-limit bench-compact bench-join bench-decode
+	bench-limit bench-compact bench-join bench-decode bench-qos
+
+# multi-tenant QoS: interactive p99 under a hostile bulk fleet, with and
+# without the shared weighted-fair admission plane
+bench-qos:
+	$(PYTHON) benchmarks/multi_tenant.py
 
 # client decode plane: NumPy vs Pallas backends (byte-identity, roofline
 # rates, placement-crossover shift)

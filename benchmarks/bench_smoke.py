@@ -112,6 +112,19 @@ def run_decode_backend_small() -> dict:
     return out
 
 
+def run_multi_tenant_small() -> dict:
+    from benchmarks import multi_tenant
+    # small config: fewer latency samples; the arms, the hostile
+    # 8-scanner fleet, and the p99 claims are unchanged
+    multi_tenant.SAMPLES = 30
+    t0 = time.perf_counter()
+    out = multi_tenant.run()
+    out["wall_s"] = time.perf_counter() - t0
+    out["claims"] = multi_tenant.check_claims(out)
+    out["small_config"] = True
+    return out
+
+
 def run_kernels() -> dict:
     from benchmarks import kernel_bench
     t0 = time.perf_counter()
@@ -135,6 +148,7 @@ BENCHES = {
     "compaction": run_compaction_small,
     "semi_join": run_semi_join_small,
     "decode_backend": run_decode_backend_small,
+    "multi_tenant": run_multi_tenant_small,
     "kernels": run_kernels,
 }
 

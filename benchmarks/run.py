@@ -14,7 +14,7 @@ import time
 from benchmarks import (adaptive_scan, compaction, decode_backend,
                         fig5_latency_scaling, fig6_cpu_utilization,
                         ingest_train, kernel_bench, layout_compare,
-                        semi_join)
+                        multi_tenant, semi_join)
 
 BENCHES = {
     "fig5": fig5_latency_scaling.main,
@@ -26,6 +26,7 @@ BENCHES = {
     "adaptive": adaptive_scan.main,
     "compaction": compaction.main,
     "semi_join": semi_join.main,
+    "multi_tenant": multi_tenant.main,
 }
 
 

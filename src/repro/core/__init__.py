@@ -24,7 +24,8 @@ from __future__ import annotations
 from repro.dataset import (AdaptiveFormat, AggSpec, CommitConflict, Dataset,
                            MutableDataset, ParquetFormat,
                            PushdownParquetFormat, Query, ScanScheduler,
-                           Scanner, dataset)
+                           Scanner, Shed, TaskContext, TenantRegistry,
+                           TenantSpec, dataset)
 from repro.storage.cephfs import CephFS, DirectObjectAccess
 from repro.storage.layouts import write_flat, write_split, write_striped
 from repro.storage.objclass import register_default_classes
@@ -45,4 +46,5 @@ __all__ = ["AggSpec", "Dataset", "MutableDataset", "CommitConflict",
            "Query", "ScanScheduler", "Scanner", "dataset", "CephFS",
            "DirectObjectAccess", "write_flat", "write_split",
            "write_striped", "register_default_classes", "ObjectStore",
-           "make_cluster"]
+           "make_cluster",
+           "Shed", "TaskContext", "TenantRegistry", "TenantSpec"]

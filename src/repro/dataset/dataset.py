@@ -65,7 +65,7 @@ class Dataset:
 
     def query(self, *, format: FileFormat | str = "pushdown",
               num_threads: int = 16, queue_depth: int = 4,
-              decode_backend=None) -> Query:
+              decode_backend=None, tenant=None) -> Query:
         """Start a lazy query: ``ds.query().select(...).filter(...)
         .limit(n)`` / ``.aggregate(...)`` / ``.count()``, executed via
         ``to_table`` / ``to_batches`` / ``to_scalar`` and inspectable via
@@ -73,27 +73,31 @@ class Dataset:
         :meth:`scanner`; ``decode_backend`` picks the client-side decode
         engine (None/"numpy" for the host path, "pallas" for the
         ``repro.kernels`` accelerator ops) for the "parquet" and
-        "adaptive" formats."""
+        "adaptive" formats.  ``tenant`` tags the run for multi-tenant
+        QoS: a tenant name, a :class:`~repro.dataset.qos.TaskContext`
+        (usually ``TenantRegistry.context(name)`` — weight, lane,
+        deadline), or None for the default tenant."""
         return Query(self, format=format, num_threads=num_threads,
                      queue_depth=queue_depth,
-                     decode_backend=decode_backend)
+                     decode_backend=decode_backend, tenant=tenant)
 
     def scanner(self, *, format: FileFormat | str = "pushdown",
                 columns: Sequence[str] | None = None,
                 predicate: Expr | None = None,
                 num_threads: int = 16, queue_depth: int = 4,
-                decode_backend=None) -> "Scanner":
+                decode_backend=None, tenant=None) -> "Scanner":
         """Build a Scanner.  ``format`` is a FileFormat instance or one of
         "parquet" (client-side), "pushdown" (storage-side), "adaptive"
         (scheduler-placed; pass an ``AdaptiveFormat`` instance instead to
         keep its result cache warm across scans).  ``decode_backend``
-        picks the client-side decode engine exactly as in
-        :meth:`query`."""
+        picks the client-side decode engine exactly as in :meth:`query`;
+        ``tenant`` tags every verb's run for multi-tenant QoS exactly as
+        in :meth:`query`."""
         return Scanner(self,
                        resolve_format(format,
                                       decode_backend=decode_backend),
                        columns, predicate, num_threads=num_threads,
-                       queue_depth=queue_depth)
+                       queue_depth=queue_depth, tenant=tenant)
 
 
 def _footer_tail_bytes(fs: CephFS, path: str) -> tuple[parquet.FileMeta, int]:
@@ -232,20 +236,21 @@ class Scanner:
 
     def __init__(self, ds: Dataset, fmt: FileFormat,
                  columns: Sequence[str] | None, predicate: Expr | None, *,
-                 num_threads: int = 16, queue_depth: int = 4):
+                 num_threads: int = 16, queue_depth: int = 4, tenant=None):
         self.ds = ds
         self.fmt = fmt
         self.columns = list(columns) if columns is not None else None
         self.predicate = predicate
         self.num_threads = num_threads
         self.queue_depth = queue_depth
+        self.tenant = tenant
         self.metrics = ScanMetrics(discovery_bytes=ds.discovery_bytes)
 
     def query(self) -> Query:
         """The lazy query equivalent to this Scanner's columns/predicate
         (the verbs below all lower through it)."""
         q = Query(self.ds, format=self.fmt, num_threads=self.num_threads,
-                  queue_depth=self.queue_depth)
+                  queue_depth=self.queue_depth, tenant=self.tenant)
         if self.predicate is not None:
             q = q.filter(self.predicate)
         if self.columns is not None:

@@ -12,15 +12,25 @@
 
 Switching the format argument switches the placement — nothing else in the
 Dataset/Scanner API changes (paper §2.2, RadosParquetFileFormat).
+
+Task options travel on one :class:`~repro.dataset.qos.TaskContext` passed
+as the single ``ctx`` argument of ``scan_fragment`` / ``aggregate_fragment``
+/ ``execute_task`` — admission controller, live row budget, selectivity
+hint, and the tenant/lane/deadline identity the QoS machinery reads.  The
+old ``admission=`` / ``limit=`` / ``selectivity_hint=`` kwarg tail and
+pre-TaskContext subclass overrides are adapted by a one-release
+compatibility shim that warns (``repro.dataset.qos.resolve_context``).
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import inspect
 import json
 import threading
 import time
+import warnings
 from typing import Any, Sequence
 
 from repro.aformat import decode as decode_mod
@@ -30,6 +40,7 @@ from repro.aformat.aggregate import (AggSpec, AggState, DEFAULT_MAX_GROUPS,
 from repro.aformat.expressions import Expr
 from repro.aformat.table import Table
 from repro.dataset.fragment import Fragment
+from repro.dataset.qos import TaskContext, resolve_context
 from repro.storage.cephfs import CephFS, DirectObjectAccess, FileSource
 
 
@@ -47,11 +58,61 @@ class TaskRecord:
     cached: bool = False  # served from the columnar result cache
 
 
+# -- one-release override shim ------------------------------------------------
+# Format subclasses written before TaskContext declare the old kwarg tail
+# (`admission=`, `limit=`, ...).  The executor detects them by signature
+# (no `ctx` parameter), warns once per class, and calls them old-style
+# with whatever subset of the tail they accept.
+
+_CTX_AWARE: dict[tuple[type, str], bool] = {}
+_LEGACY_WARNED: set[tuple[type, str]] = set()
+
+
+def _takes_ctx(cls: type, name: str) -> bool:
+    key = (cls, name)
+    hit = _CTX_AWARE.get(key)
+    if hit is None:
+        params = inspect.signature(getattr(cls, name)).parameters
+        hit = "ctx" in params
+        _CTX_AWARE[key] = hit
+    return hit
+
+
+def _legacy_call_kwargs(cls: type, name: str, ctx: TaskContext) -> dict:
+    if (cls, name) not in _LEGACY_WARNED:
+        _LEGACY_WARNED.add((cls, name))
+        warnings.warn(
+            f"{cls.__name__}.{name} overrides the pre-TaskContext "
+            f"signature; adapt it to accept `ctx` (this shim is "
+            f"one release only)", DeprecationWarning, stacklevel=4)
+    params = inspect.signature(getattr(cls, name)).parameters
+    kwargs: dict[str, Any] = {}
+    if "admission" in params:
+        kwargs["admission"] = ctx.admission
+    if ctx.limit is not None and "limit" in params:
+        kwargs["limit"] = ctx.limit
+    if ctx.selectivity_hint is not None and "selectivity_hint" in params:
+        kwargs["selectivity_hint"] = ctx.selectivity_hint
+    return kwargs
+
+
+def _call_scan(fmt: "FileFormat", fs: CephFS, frag: Fragment, columns,
+               predicate, ctx: TaskContext):
+    """Dispatch to ``fmt.scan_fragment`` through the override shim."""
+    if _takes_ctx(type(fmt), "scan_fragment"):
+        return fmt.scan_fragment(fs, frag, columns, predicate, ctx)
+    return fmt.scan_fragment(
+        fs, frag, columns, predicate,
+        **_legacy_call_kwargs(type(fmt), "scan_fragment", ctx))
+
+
 class FileFormat:
     """Scan a fragment; returns (Table, TaskRecord).
 
-    ``admission`` (an :class:`~repro.dataset.admission.AdmissionController`
-    or None) bounds in-flight fragment operations per storage node; every
+    ``ctx`` (a :class:`~repro.dataset.qos.TaskContext` or None) carries
+    every task option: the admission controller bounding in-flight
+    fragment operations per storage node, the live row budget, the
+    selectivity hint, and the tenant/lane/deadline QoS identity.  Every
     format acquires a slot on the node it is about to touch — storage-side
     cls calls and client-side byte pulls alike."""
 
@@ -60,49 +121,55 @@ class FileFormat:
     def scan_fragment(self, fs: CephFS, frag: Fragment,
                       columns: Sequence[str] | None,
                       predicate: Expr | None,
-                      admission=None,
-                      limit: int | None = None,
-                      selectivity_hint: float | None = None,
-                      ) -> tuple[Table, TaskRecord]:
+                      ctx: TaskContext | None = None,
+                      **legacy) -> tuple[Table, TaskRecord]:
         raise NotImplementedError
 
     def aggregate_fragment(self, fs: CephFS, frag: Fragment,
                            specs: Sequence[AggSpec], group_by: str | None,
                            predicate: Expr | None, *, schema,
                            max_groups: int = DEFAULT_MAX_GROUPS,
-                           admission=None) -> tuple[AggState, TaskRecord]:
+                           ctx: TaskContext | None = None,
+                           **legacy) -> tuple[AggState, TaskRecord]:
         """Partial-aggregate one fragment; returns (AggState, TaskRecord).
         ``schema`` is the dataset schema (split-layout fragments carry no
         client-side footer of their own).  The default is the client-side
         path — scan the needed columns, fold locally — so every format
         answers ``Scanner.aggregate``."""
+        ctx = resolve_context(ctx, legacy)
         return aggregate_client(self, fs, frag, specs, group_by,
-                                predicate, schema=schema,
-                                admission=admission)
+                                predicate, schema=schema, ctx=ctx)
 
-    def execute_task(self, fs: CephFS, task, admission=None):
+    def execute_task(self, fs: CephFS, task,
+                     ctx: TaskContext | None = None, **legacy):
         """The single physical-task entry point the shared query executor
         routes through: one ``FragmentTask`` in (see ``dataset.plan``),
         one (Table | AggState, TaskRecord) out.  Dispatches to the
-        format's ``scan_fragment`` / ``aggregate_fragment`` placement.
-        The ``limit`` / ``selectivity_hint`` kwargs are only forwarded
-        when the task carries them, so format subclasses that predate
-        limit pushdown or semi-join pushdown keep working for plain
-        scans."""
+        format's ``scan_fragment`` / ``aggregate_fragment`` placement
+        with the task's own limit / selectivity hint folded into ``ctx``
+        (pre-TaskContext subclass overrides go through the one-release
+        shim)."""
+        ctx = resolve_context(ctx, legacy)
         if task.kind == "scan":
-            kwargs: dict[str, Any] = {}
-            if task.limit is not None:
-                kwargs["limit"] = task.limit
-            if getattr(task, "selectivity_hint", None) is not None:
-                kwargs["selectivity_hint"] = task.selectivity_hint
-            return self.scan_fragment(fs, task.fragment, task.columns,
-                                      task.predicate, admission=admission,
-                                      **kwargs)
-        return self.aggregate_fragment(fs, task.fragment, task.specs,
-                                       task.group_by, task.predicate,
-                                       schema=task.schema,
-                                       max_groups=task.max_groups,
-                                       admission=admission)
+            hint = getattr(task, "selectivity_hint", None)
+            if task.limit is not None or hint is not None:
+                ctx = dataclasses.replace(
+                    ctx,
+                    limit=task.limit if task.limit is not None
+                    else ctx.limit,
+                    selectivity_hint=hint if hint is not None
+                    else ctx.selectivity_hint)
+            return _call_scan(self, fs, task.fragment, task.columns,
+                              task.predicate, ctx)
+        if _takes_ctx(type(self), "aggregate_fragment"):
+            return self.aggregate_fragment(
+                fs, task.fragment, task.specs, task.group_by,
+                task.predicate, schema=task.schema,
+                max_groups=task.max_groups, ctx=ctx)
+        return self.aggregate_fragment(
+            fs, task.fragment, task.specs, task.group_by, task.predicate,
+            schema=task.schema, max_groups=task.max_groups,
+            **_legacy_call_kwargs(type(self), "aggregate_fragment", ctx))
 
     def explain_task(self, fs: CephFS, task) -> str:
         """One-line placement/cache/hedge annotation for ``explain()``."""
@@ -158,13 +225,17 @@ def count_state(n: int) -> AggState:
 
 def aggregate_client(fmt: FileFormat, fs: CephFS, frag: Fragment,
                      specs, group_by, predicate, *, schema,
-                     admission=None) -> "tuple[AggState, TaskRecord]":
+                     ctx: TaskContext | None = None,
+                     **legacy) -> "tuple[AggState, TaskRecord]":
     """Client-side aggregation over any format's scan path: pull only the
     referenced columns through ``scan_fragment`` and fold them locally
     (no cardinality bound — the client owns its memory)."""
+    ctx = resolve_context(ctx, legacy)
     cols = needed_columns(specs, group_by, schema, predicate)
-    tbl, rec = fmt.scan_fragment(fs, frag, cols, predicate,
-                                 admission=admission)
+    # an aggregate folds the fragment's full matching rows — the scan
+    # below must not inherit a row budget from the context
+    scan_ctx = dataclasses.replace(ctx, limit=None)
+    tbl, rec = _call_scan(fmt, fs, frag, cols, predicate, scan_ctx)
     t0 = time.perf_counter()
     state = partial_aggregate(tbl, specs, group_by)
     fold = time.perf_counter() - t0
@@ -177,13 +248,13 @@ def aggregate_client(fmt: FileFormat, fs: CephFS, frag: Fragment,
     return state, rec
 
 
-def _admit_fragment(fs: CephFS, frag: Fragment, admission):
+def _admit_fragment(fs: CephFS, frag: Fragment, ctx: TaskContext):
     """Slot on the OSD this fragment's bytes live on (no-op without an
-    admission controller)."""
-    if admission is None:
+    admission controller on the context)."""
+    if ctx.admission is None:
         return contextlib.nullcontext()
     name = fs.object_names(frag.path)[frag.obj_idx]
-    return admission.admit_object(name)
+    return ctx.admission.admit_object(name, ctx)
 
 
 class ParquetFormat(FileFormat):
@@ -198,8 +269,9 @@ class ParquetFormat(FileFormat):
     def __init__(self, *, decode_backend=None):
         self.decode_backend = decode_mod.resolve_backend(decode_backend)
 
-    def scan_fragment(self, fs, frag, columns, predicate, admission=None,
-                      limit=None, selectivity_hint=None):
+    def scan_fragment(self, fs, frag, columns, predicate, ctx=None,
+                      **legacy):
+        ctx = resolve_context(ctx, legacy)
         wire = 0
 
         def on_read(n):
@@ -207,7 +279,7 @@ class ParquetFormat(FileFormat):
             wire += n
 
         src = FileSource(fs, frag.path, on_read=on_read)
-        with _admit_fragment(fs, frag, admission):
+        with _admit_fragment(fs, frag, ctx):
             t0 = time.perf_counter()
             meta = frag.client_meta
             if meta is None:
@@ -215,11 +287,11 @@ class ParquetFormat(FileFormat):
             rg = meta.row_groups[frag.client_rg_index]
             tbl = parquet.scan_row_group(src, meta, rg, columns, predicate,
                                          backend=self.decode_backend)
-            if limit is not None:
+            if ctx.limit is not None:
                 # the raw chunk bytes already crossed the wire (client
                 # placement decodes whole chunks); the slice only trims
                 # what the caller materializes
-                tbl = tbl.head(limit)
+                tbl = tbl.head(ctx.limit)
             cpu = time.perf_counter() - t0
         rec = TaskRecord("client", -1, cpu, wire, cpu, len(tbl))
         return tbl, rec
@@ -301,19 +373,23 @@ class PushdownParquetFormat(FileFormat):
     def __init__(self, *, hedge_threshold_s: float | None = None):
         self.hedge_threshold_s = hedge_threshold_s
 
-    def scan_fragment(self, fs, frag, columns, predicate, admission=None,
-                      limit=None, selectivity_hint=None):
+    def scan_fragment(self, fs, frag, columns, predicate, ctx=None,
+                      **legacy):
         # the hint prices placement choices; a static placement ignores it
+        ctx = resolve_context(ctx, legacy)
         doa = DirectObjectAccess(fs)
-        payload = scan_payload(frag, columns, predicate, limit)
-        with _admit_fragment(fs, frag, admission):
+        payload = scan_payload(frag, columns, predicate, ctx.limit)
+        with _admit_fragment(fs, frag, ctx):
             if self.hedge_threshold_s is not None:
                 result, osd_id, el, hedged = doa.call_hedged(
                     frag.path, frag.obj_idx, "scan_op", payload,
-                    hedge_threshold_s=self.hedge_threshold_s)
+                    hedge_threshold_s=self.hedge_threshold_s,
+                    tenant=ctx.tenant, lane=ctx.lane)
             else:
                 result, osd_id, el = doa.call(frag.path, frag.obj_idx,
-                                              "scan_op", payload)
+                                              "scan_op", payload,
+                                              tenant=ctx.tenant,
+                                              lane=ctx.lane)
                 hedged = False
         t0 = time.perf_counter()
         tbl = Table.from_ipc(result)
@@ -324,32 +400,35 @@ class PushdownParquetFormat(FileFormat):
 
     def aggregate_fragment(self, fs, frag, specs, group_by, predicate, *,
                            schema, max_groups=DEFAULT_MAX_GROUPS,
-                           admission=None):
+                           ctx=None, **legacy):
         """``agg_op`` on the storage node: only the serialized partial
         state crosses the wire.  A SPILL reply (cardinality over
         ``max_groups``) falls back to the storage-side *scan* — filtered
         columns ship, the client folds them (spill-to-scan).  The
         degenerate ungrouped COUNT(*) keeps the historic ``rowcount_op``
         contract: a bare integer on the wire, not a partial state."""
+        ctx = resolve_context(ctx, legacy)
         if is_degenerate_count(specs, group_by):
-            return self._count_fragment(fs, frag, predicate, admission)
+            return self._count_fragment(fs, frag, predicate, ctx)
         doa = DirectObjectAccess(fs)
         payload = agg_payload(frag, specs, group_by, predicate, max_groups)
-        with _admit_fragment(fs, frag, admission):
+        with _admit_fragment(fs, frag, ctx):
             if self.hedge_threshold_s is not None:
                 raw, osd_id, el, hedged = doa.call_hedged(
                     frag.path, frag.obj_idx, "agg_op", payload,
-                    hedge_threshold_s=self.hedge_threshold_s)
+                    hedge_threshold_s=self.hedge_threshold_s,
+                    tenant=ctx.tenant, lane=ctx.lane)
             else:
                 raw, osd_id, el = doa.call(frag.path, frag.obj_idx,
-                                           "agg_op", payload)
+                                           "agg_op", payload,
+                                           tenant=ctx.tenant, lane=ctx.lane)
                 hedged = False
         t0 = time.perf_counter()
         state = parse_agg_reply(raw)
         if state is None:
             state, rec = aggregate_client(self, fs, frag, specs, group_by,
                                           predicate, schema=schema,
-                                          admission=admission)
+                                          ctx=ctx)
             # the refused agg_op reply still crossed the wire
             rec = dataclasses.replace(
                 rec, wire_bytes=rec.wire_bytes + len(raw), hedged=hedged)
@@ -359,7 +438,7 @@ class PushdownParquetFormat(FileFormat):
                          state.rows, hedged=hedged)
         return state, rec
 
-    def _count_fragment(self, fs, frag, predicate, admission):
+    def _count_fragment(self, fs, frag, predicate, ctx: TaskContext):
         """COUNT(*) [WHERE pred] via ``rowcount_op``: only an integer
         crosses the wire."""
         doa = DirectObjectAccess(fs)
@@ -370,14 +449,16 @@ class PushdownParquetFormat(FileFormat):
         }
         if frag.footer is not None:
             payload["footer"] = frag.footer.serialize()
-        with _admit_fragment(fs, frag, admission):
+        with _admit_fragment(fs, frag, ctx):
             if self.hedge_threshold_s is not None:
                 raw, osd_id, el, hedged = doa.call_hedged(
                     frag.path, frag.obj_idx, "rowcount_op", payload,
-                    hedge_threshold_s=self.hedge_threshold_s)
+                    hedge_threshold_s=self.hedge_threshold_s,
+                    tenant=ctx.tenant, lane=ctx.lane)
             else:
                 raw, osd_id, el = doa.call(frag.path, frag.obj_idx,
-                                           "rowcount_op", payload)
+                                           "rowcount_op", payload,
+                                           tenant=ctx.tenant, lane=ctx.lane)
                 hedged = False
         n = json.loads(raw)["rows"]
         rec = TaskRecord("osd", osd_id, el, len(raw), 0.0, n,
@@ -431,18 +512,19 @@ class AdaptiveFormat(FileFormat):
                 self._schedulers[id(fs)] = sched
             return sched
 
-    def scan_fragment(self, fs, frag, columns, predicate, admission=None,
-                      limit=None, selectivity_hint=None):
-        return self.scheduler_for(fs).scan_fragment(
-            frag, columns, predicate, admission=admission, limit=limit,
-            selectivity_hint=selectivity_hint)
+    def scan_fragment(self, fs, frag, columns, predicate, ctx=None,
+                      **legacy):
+        ctx = resolve_context(ctx, legacy)
+        return self.scheduler_for(fs).scan_fragment(frag, columns,
+                                                    predicate, ctx)
 
     def aggregate_fragment(self, fs, frag, specs, group_by, predicate, *,
                            schema, max_groups=DEFAULT_MAX_GROUPS,
-                           admission=None):
+                           ctx=None, **legacy):
+        ctx = resolve_context(ctx, legacy)
         return self.scheduler_for(fs).aggregate_fragment(
             frag, specs, group_by, predicate, schema=schema,
-            max_groups=max_groups, admission=admission)
+            max_groups=max_groups, ctx=ctx)
 
     def explain_task(self, fs, task):
         """Live placement estimate + result-cache probe for explain().

@@ -56,9 +56,10 @@ from repro.aformat.expressions import (ALL, And, BloomIn, Cmp, Expr, IsIn,
                                        NONE, Not, Or)
 from repro.aformat.schema import Field, Schema
 from repro.aformat.table import Column, Table
-from repro.dataset.admission import AdmissionController
+from repro.dataset.admission import AdmissionController, AdmissionTimeout
 from repro.dataset.format import TaskRecord, resolve_format
 from repro.dataset.fragment import Fragment
+from repro.dataset.qos import Shed, TaskContext, as_task_context
 
 #: Distinct build-key cardinality at or below which the semi-join pass
 #: pushes an exact IN-list into the probe scan; above it, a bloom filter
@@ -636,6 +637,10 @@ class ScanMetrics:
     #: Build-side metrics of a join run (its own scan), kept separate so
     #: probe-side wire bytes stay directly comparable across strategies.
     build: "ScanMetrics | None" = None
+    tenant: str = "default"
+    lane: str = "bulk"
+    #: Set when the run was deadline-shed (the run verbs return it too).
+    shed: Shed | None = None
 
     @property
     def client_cpu_s(self) -> float:
@@ -659,6 +664,8 @@ class ScanMetrics:
 
     def summary(self) -> dict:
         d = {
+            "tenant": self.tenant,
+            "lane": self.lane,
             "fragments": self.fragments_total,
             "pruned": self.fragments_pruned,
             "metadata_answers": self.metadata_answers,
@@ -670,7 +677,12 @@ class ScanMetrics:
             "cache_hits": self.cache_hits,
             "hedged": self.hedged_tasks,
             "admission_waits": self.admission.get("waits", 0),
+            "admission_wait_s": self.admission.get("wait_s", 0.0),
+            "preemptions": self.admission.get("preemptions", 0),
+            "sheds": self.admission.get("sheds", 0),
         }
+        if self.shed is not None:
+            d["shed"] = str(self.shed)
         if self.build is not None:
             d["build"] = self.build.summary()
         return d
@@ -681,6 +693,16 @@ class ScanMetrics:
 # ---------------------------------------------------------------------------
 
 
+def _admission_delta(before: dict, after: dict) -> dict:
+    """This run's share of a (possibly shared, possibly long-lived)
+    admission controller's counters."""
+    d = {"slots_per_osd": after["slots_per_osd"]}
+    for k in ("admitted", "waits", "wait_s", "preemptions", "sheds"):
+        v = after[k] - before[k]
+        d[k] = round(v, 6) if k == "wait_s" else v
+    return d
+
+
 def stream_tasks(
     plan: PhysicalPlan,
     fmt,
@@ -688,6 +710,7 @@ def stream_tasks(
     *,
     max_inflight: int,
     queue_depth: int,
+    ctx: TaskContext | None = None,
 ) -> Iterator[tuple[FragmentTask, Any]]:
     """Run the plan's fragment tasks through ``fmt.execute_task`` with at
     most ``max_inflight`` in flight, issuing new work only as finished
@@ -697,19 +720,48 @@ def stream_tasks(
     Yields (task, Table | AggState) in completion order.  For scan plans
     with a limit, the live row budget stops issuance the moment it is
     met and cancels still-queued tasks — fragments past the budget are
-    never scanned."""
+    never scanned.
+
+    ``ctx`` is the run's :class:`~repro.dataset.qos.TaskContext`.  With a
+    registry attached, admission goes through the cluster's shared
+    weighted-fair controller (every tenant arbitrated together);
+    otherwise a run-private controller reproduces the historic
+    single-tenant behavior.  A run that cannot meet ``ctx.deadline_s``
+    stops issuing work and records a typed :class:`Shed` on
+    ``metrics.shed`` — the stream simply ends early; the run verbs turn
+    it into their return value."""
     ds = plan.dataset
-    admission = AdmissionController(ds.fs.store, queue_depth)
+    ctx = ctx if ctx is not None else TaskContext()
+    if ctx.admission is not None:
+        admission = ctx.admission
+    elif ctx.registry is not None:
+        admission = ctx.registry.controller(ds.fs.store)
+    else:
+        admission = AdmissionController(ds.fs.store, queue_depth)
+    t0 = time.perf_counter()
+    ctx = dataclasses.replace(
+        ctx, admission=admission,
+        started_at=t0 if ctx.started_at is None else ctx.started_at)
     lock = threading.Lock()
     remaining = plan.limit if plan.kind == "scan" else None
+    completed = 0
+    total = len(plan.tasks)
+
+    def shed(reason: str):
+        metrics.shed = Shed(ctx.tenant, ctx.lane, reason, ctx.deadline_s,
+                            ctx.elapsed_s(), completed, total)
+
+    def over_deadline() -> bool:
+        r = ctx.remaining_s()
+        return r is not None and r <= 0
 
     def run(task: FragmentTask):
-        out, rec = fmt.execute_task(ds.fs, task, admission=admission)
+        out, rec = fmt.execute_task(ds.fs, task, ctx)
         with lock:
             metrics.tasks.append(rec)
         return task, out
 
-    t0 = time.perf_counter()
+    before = admission.stats()
     try:
         tasks = plan.tasks
         if max_inflight <= 1 or len(tasks) <= 1:
@@ -718,7 +770,17 @@ def stream_tasks(
                     if remaining <= 0:
                         return
                     task.limit = remaining
-                task, out = run(task)
+                if over_deadline():
+                    shed(f"deadline expired with {total - completed} "
+                         f"tasks left")
+                    return
+                try:
+                    task, out = run(task)
+                except AdmissionTimeout as e:
+                    shed(f"admission timeout on osd.{e.osd_id} after "
+                         f"{e.waited_s * 1e3:.1f}ms queued")
+                    return
+                completed += 1
                 if remaining is not None:
                     remaining -= len(out)
                 yield task, out
@@ -740,22 +802,35 @@ def stream_tasks(
                         pending, return_when=FIRST_COMPLETED
                     )
                     for fut in done:
-                        task, out = fut.result()
+                        try:
+                            task, out = fut.result()
+                        except AdmissionTimeout as e:
+                            shed(f"admission timeout on osd.{e.osd_id} "
+                                 f"after {e.waited_s * 1e3:.1f}ms queued")
+                            return
+                        completed += 1
                         if remaining is not None:
                             remaining -= len(out)
-                        if remaining is None or remaining > 0:
+                        if (remaining is None or remaining > 0) \
+                                and not over_deadline():
                             nxt = next(it, None)
                             if nxt is not None:
                                 pending.add(submit(pool, nxt))
                         yield task, out
                         if remaining is not None and remaining <= 0:
                             return  # budget met: cancel queued work
+                        if over_deadline() and completed < total:
+                            shed(f"deadline expired with "
+                                 f"{total - completed} tasks left")
+                            return
             finally:
                 for fut in pending:  # consumer stopped early / budget met
                     fut.cancel()
     finally:
         metrics.wall_s = time.perf_counter() - t0
-        metrics.admission = admission.stats()
+        metrics.admission = _admission_delta(before, admission.stats())
+        if ctx.registry is not None:
+            ctx.registry.record(metrics)
 
 
 def empty_table(schema, columns: Sequence[str] | None) -> Table:
@@ -1065,6 +1140,7 @@ class Query:
         num_threads: int = 16,
         queue_depth: int = 4,
         decode_backend=None,
+        tenant=None,
         _root: PlanNode | None = None,
         _scalar: bool = False,
     ):
@@ -1072,6 +1148,7 @@ class Query:
         self.fmt = resolve_format(format, decode_backend=decode_backend)
         self.num_threads = num_threads
         self.queue_depth = queue_depth
+        self.ctx = as_task_context(tenant)
         self._root = _root if _root is not None else Scan(ds)
         self._scalar = _scalar
         self.metrics = ScanMetrics(discovery_bytes=ds.discovery_bytes)
@@ -1083,6 +1160,7 @@ class Query:
         q.fmt = self.fmt
         q.num_threads = self.num_threads
         q.queue_depth = self.queue_depth
+        q.ctx = self.ctx
         q._root = root
         q._scalar = self._scalar if scalar is None else scalar
         q.metrics = ScanMetrics(discovery_bytes=self.ds.discovery_bytes)
@@ -1281,6 +1359,8 @@ class Query:
             fragments_total=plan.fragments_total,
             fragments_pruned=plan.fragments_pruned,
             metadata_answers=plan.metadata_answers,
+            tenant=self.ctx.tenant,
+            lane=self.ctx.lane,
         )
         self.metrics = m
         return m
@@ -1333,7 +1413,7 @@ class Query:
         )
         return plan, ctx, bq, post
 
-    def _join_to_table(self) -> Table:
+    def _join_to_table(self) -> "Table | Shed":
         plan, ctx, bq, post = self._prepare_join()
         metrics = self._begin(plan)
         metrics.build = bq.metrics
@@ -1344,9 +1424,14 @@ class Query:
                 metrics,
                 max_inflight=self.num_threads,
                 queue_depth=self.queue_depth,
+                ctx=self.ctx,
             ),
             key=lambda p: p[0].index,
         )
+        if metrics.shed is not None:
+            # a shed join probe is never degraded: a partial probe side
+            # would silently drop matches
+            return metrics.shed
         if plan.limit is not None:
             # probe-side limit: trim the probe rows first (the budget is
             # on probe rows), then join once
@@ -1382,9 +1467,12 @@ class Query:
                         metrics,
                         max_inflight=max_inflight or self.num_threads,
                         queue_depth=self.queue_depth,
+                        ctx=self.ctx,
                     ),
                     key=lambda p: p[0].index,
                 )
+                if metrics.shed is not None:
+                    return
                 tables = [t for _, t in parts if len(t)]
                 probe_tbl = (
                     Table.concat(tables)
@@ -1405,6 +1493,7 @@ class Query:
                 metrics,
                 max_inflight=max_inflight or self.num_threads,
                 queue_depth=self.queue_depth,
+                ctx=self.ctx,
             ):
                 part = _join_batch(tbl, ctx)
                 if post.predicate is not None:
@@ -1448,6 +1537,7 @@ class Query:
                 metrics,
                 max_inflight=max_inflight or self.num_threads,
                 queue_depth=self.queue_depth,
+                ctx=self.ctx,
             ):
                 if remaining is not None:
                     tbl = tbl.head(remaining)
@@ -1458,10 +1548,15 @@ class Query:
 
         return gen()
 
-    def to_table(self) -> Table:
+    def to_table(self) -> "Table | Shed":
         """Materialize the result (scan plans reassemble fragments in
         plan order; aggregates finalize the merged partial state; joins
-        assemble probe batches against the built hash table)."""
+        assemble probe batches against the built hash table).
+
+        A run that misses its ``TaskContext`` deadline returns a typed
+        :class:`Shed` instead of a table; under
+        ``shed_policy="degrade"`` a shed *scan* carries the fragments
+        completed before the deadline as ``shed.partial``."""
         if self._join_node() is not None:
             return self._join_to_table()
         plan = lower(_copy_plan(self._root))
@@ -1474,8 +1569,13 @@ class Query:
                 metrics,
                 max_inflight=self.num_threads,
                 queue_depth=self.queue_depth,
+                ctx=self.ctx,
             ):
                 state.merge(part)  # completion order
+            if metrics.shed is not None:
+                # a partial aggregate is a wrong answer, not a degraded
+                # one — sheds of aggregate plans never carry a partial
+                return metrics.shed
             metrics.rows = state.rows
             out = state.finalize(self.ds.schema)
             if plan.limit is not None:
@@ -1488,9 +1588,19 @@ class Query:
                 metrics,
                 max_inflight=self.num_threads,
                 queue_depth=self.queue_depth,
+                ctx=self.ctx,
             ),
             key=lambda p: p[0].index,
         )
+        if metrics.shed is not None:
+            if self.ctx.shed_policy == "degrade":
+                tables = [t for _, t in parts if len(t)]
+                metrics.shed.partial = (
+                    Table.concat(tables)
+                    if tables
+                    else empty_table(self.ds.schema, plan.columns)
+                )
+            return metrics.shed
         tables = [t for _, t in parts if len(t)]
         result = (
             Table.concat(tables)
@@ -1503,8 +1613,11 @@ class Query:
         return result
 
     def to_scalar(self):
-        """Run a single-cell query (e.g. ``count()``) to its scalar."""
+        """Run a single-cell query (e.g. ``count()``) to its scalar —
+        or the :class:`Shed` if the run missed its deadline."""
         out = self.to_table()
+        if isinstance(out, Shed):
+            return out
         if len(out) != 1 or len(out.schema) != 1:
             raise ValueError(
                 f"to_scalar() needs a 1x1 result, got "
@@ -1521,10 +1634,16 @@ class Query:
         budget = (
             f", row_budget={plan.limit}" if plan.limit is not None else ""
         )
+        qos = ""
+        if self.ctx.tenant != "default" or self.ctx.deadline_s is not None:
+            qos = f", tenant={self.ctx.tenant}/{self.ctx.lane}"
+            if self.ctx.deadline_s is not None:
+                qos += (f", deadline={self.ctx.deadline_s * 1e3:.0f}ms"
+                        f"/{self.ctx.shed_policy}")
         lines.append(
             f"executor: streaming, format={self.fmt.name}, "
             f"max_inflight={self.num_threads}, "
-            f"queue_depth={self.queue_depth}/OSD{budget}"
+            f"queue_depth={self.queue_depth}/OSD{budget}{qos}"
         )
         lines.append(
             f"fragments: {plan.fragments_total} total, "

@@ -78,10 +78,12 @@ from repro.aformat.aggregate import (AggState, DEFAULT_MAX_GROUPS,
                                      needed_columns, partial_aggregate)
 from repro.aformat.expressions import Expr
 from repro.aformat.table import Table
+from repro.dataset.admission import LANE_PRIORITY
 from repro.dataset.format import (ParquetFormat, TaskRecord, agg_payload,
                                   count_state, is_degenerate_count,
                                   parse_agg_reply, scan_payload)
 from repro.dataset.fragment import Fragment
+from repro.dataset.qos import TaskContext, resolve_context
 from repro.storage.cephfs import CephFS, DirectObjectAccess
 from repro.storage.objstore import ObjectNotFound, OSDDownError
 
@@ -124,63 +126,116 @@ class _Ewma:
         return default if self._v is None else self._v
 
 
+class _CacheShard:
+    __slots__ = ("od", "nbytes", "budget")
+
+    def __init__(self, budget: int):
+        self.od: OrderedDict[tuple, bytes] = OrderedDict()
+        self.nbytes = 0
+        self.budget = budget
+
+
 class ResultCache:
-    """Byte-bounded LRU of decoded scan results (Arrow IPC bytes).
+    """Byte-bounded LRU of decoded scan results (Arrow IPC bytes), with
+    per-tenant budgets.
 
     Keys carry the object version, so an overwrite invalidates implicitly:
     the new scan misses, and the stale entry ages out of the LRU.
-    """
+
+    Each tenant's entries live in their own LRU shard bounded by that
+    tenant's registered ``cache_bytes`` budget (default: the full
+    capacity), and eviction under a tenant's budget only recycles *that
+    tenant's* entries — a bulk scanner churning through cold data cannot
+    evict the interactive working set.  ``capacity_bytes`` stays the
+    global backstop: if the shards together outgrow it, the shard using
+    the largest fraction of its own budget shrinks first.  A single
+    (default) tenant therefore behaves exactly like the historic
+    one-LRU cache."""
 
     def __init__(self, capacity_bytes: int = 256 << 20):
         self.capacity_bytes = capacity_bytes
-        self._od: OrderedDict[tuple, bytes] = OrderedDict()
+        self._shards: dict[str, _CacheShard] = {}
         self._bytes = 0
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
-    def get(self, key: tuple) -> bytes | None:
+    def get(self, key: tuple, tenant: str = "default") -> bytes | None:
         with self._lock:
-            data = self._od.get(key)
+            sh = self._shards.get(tenant)
+            data = sh.od.get(key) if sh is not None else None
             if data is None:
                 self.misses += 1
                 return None
-            self._od.move_to_end(key)
+            sh.od.move_to_end(key)
             self.hits += 1
             return data
 
-    def put(self, key: tuple, data: bytes):
-        if len(data) > self.capacity_bytes:
-            return
-        with self._lock:
-            old = self._od.pop(key, None)
-            if old is not None:
-                self._bytes -= len(old)
-            self._od[key] = data
-            self._bytes += len(data)
-            while self._bytes > self.capacity_bytes:
-                _, ev = self._od.popitem(last=False)
-                self._bytes -= len(ev)
-                self.evictions += 1
+    def _evict_one(self, sh: _CacheShard):
+        _, ev = sh.od.popitem(last=False)
+        sh.nbytes -= len(ev)
+        self._bytes -= len(ev)
+        self.evictions += 1
 
-    def contains(self, key: tuple) -> bool:
-        """Membership probe that neither recences the entry nor perturbs
-        the hit/miss counters — ``explain()`` uses it."""
+    def put(self, key: tuple, data: bytes, tenant: str = "default",
+            budget: int | None = None):
         with self._lock:
-            return key in self._od
+            sh = self._shards.get(tenant)
+            if sh is None:
+                sh = _CacheShard(self.capacity_bytes)
+                self._shards[tenant] = sh
+            if budget is not None:
+                sh.budget = min(budget, self.capacity_bytes)
+            if len(data) > sh.budget:
+                return
+            old = sh.od.pop(key, None)
+            if old is not None:
+                sh.nbytes -= len(old)
+                self._bytes -= len(old)
+            sh.od[key] = data
+            sh.nbytes += len(data)
+            self._bytes += len(data)
+            while sh.nbytes > sh.budget and sh.od:
+                self._evict_one(sh)
+            while self._bytes > self.capacity_bytes:
+                pool = [s for s in self._shards.values() if s.od]
+                if not pool:
+                    break
+                self._evict_one(max(pool, key=lambda s:
+                                    (s.nbytes / max(1, s.budget), s.nbytes)))
+
+    def contains(self, key: tuple, tenant: str | None = None) -> bool:
+        """Membership probe that neither recences the entry nor perturbs
+        the hit/miss counters — ``explain()`` uses it.  Without a tenant
+        it answers "cached for anyone?"."""
+        with self._lock:
+            if tenant is not None:
+                sh = self._shards.get(tenant)
+                return sh is not None and key in sh.od
+            return any(key in s.od for s in self._shards.values())
 
     def __len__(self):
-        return len(self._od)
+        return sum(len(s.od) for s in self._shards.values())
 
     @property
     def nbytes(self) -> int:
         return self._bytes
 
     def stats(self) -> dict:
-        return {"entries": len(self._od), "bytes": self._bytes,
-                "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions}
+        with self._lock:
+            return {"entries": sum(len(s.od)
+                                   for s in self._shards.values()),
+                    "bytes": self._bytes,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}
+
+    def by_tenant(self) -> dict:
+        """Per-tenant shard occupancy (entries / bytes / budget)."""
+        with self._lock:
+            return {t: {"entries": len(s.od), "bytes": s.nbytes,
+                        "budget": s.budget}
+                    for t, s in self._shards.items()}
 
 
 @dataclasses.dataclass
@@ -248,16 +303,39 @@ class ScanScheduler:
         # split: the object *is* the row group (plus a small footer)
         return self.store.stat(self._object_name(frag))
 
-    def pressure_of(self, frag: Fragment) -> float:
+    def pressure_of(self, frag: Fragment,
+                    ctx: TaskContext | None = None) -> float:
         """Min pressure over the fragment's up replicas: hedging lets the
         storage path reach the fastest copy, so the optimistic replica is
-        the one the estimate should price."""
+        the one the estimate should price.  With a QoS context the
+        pressure is *lane-visible* (see :meth:`_tenant_pressure`)."""
         name = self._object_name(frag)
         loads = [self.store.load_of(o) for o in self.store.acting_set(name)
                  if not o.down]
         if not loads:
             return float("inf")
-        return min(l.pressure for l in loads)
+        return min(self._tenant_pressure(l, ctx) for l in loads)
+
+    @staticmethod
+    def _tenant_pressure(load, ctx: TaskContext | None) -> float:
+        """Per-tenant placement pressure: a tenant prices an OSD by the
+        in-flight work that can actually delay it — its own lane and
+        higher-priority lanes.  Admission arbitration keeps lower lanes
+        from queuing ahead of it, so one bulk tenant's flood on a hot
+        OSD must not flip everyone's pushdown-vs-client crossover.
+        Unattributed external load (``OSD.background_load``) is assumed
+        bulk.  Without a QoS registry on the context the classic
+        every-tenant pressure returns unchanged."""
+        if ctx is None or ctx.registry is None \
+                or load.by_tenant is None or load.down:
+            return load.pressure
+        rank = LANE_PRIORITY.get(ctx.lane, 1)
+        visible = sum(n for (_t, lane), n in load.by_tenant.items()
+                      if LANE_PRIORITY.get(lane, 1) <= rank)
+        if rank >= 1:                       # bulk and background lanes
+            visible += load.external
+        qd = visible / max(1, load.threads)
+        return load.straggle_factor * (1.0 + qd)
 
     def storage_threads(self) -> int:
         """Aggregate scan-thread capacity of the up part of the cluster."""
@@ -265,7 +343,8 @@ class ScanScheduler:
 
     def estimate(self, frag: Fragment, *,
                  out_bytes: float | None = None,
-                 selectivity_hint: float | None = None) -> PlacementEstimate:
+                 selectivity_hint: float | None = None,
+                 ctx: TaskContext | None = None) -> PlacementEstimate:
         """Price both placements for this fragment from live load and the
         learned decode-rate / selectivity estimates.
 
@@ -296,7 +375,7 @@ class ScanScheduler:
             out_bytes = in_bytes * self._out_ratio.value(DEFAULT_OUT_RATIO)
             if selectivity_hint is not None:
                 out_bytes *= min(1.0, max(0.0, selectivity_hint))
-        pressure = self.pressure_of(frag)
+        pressure = self.pressure_of(frag, ctx)
         est_osd = max(decode_osd_s * pressure / self.storage_threads(),
                       out_bytes / self.net_bw)
         est_client = max(in_bytes / self.net_bw,
@@ -371,22 +450,23 @@ class ScanScheduler:
     def scan_fragment(self, frag: Fragment,
                       columns: Sequence[str] | None,
                       predicate: Expr | None,
-                      admission=None,
-                      limit: int | None = None,
-                      selectivity_hint: float | None = None,
-                      ) -> tuple[Table, TaskRecord]:
+                      ctx: TaskContext | None = None,
+                      **legacy) -> tuple[Table, TaskRecord]:
         """Cache lookup -> placement decision -> (hedged) execution.
 
         Returns the same (Table, TaskRecord) contract as a FileFormat, so
-        ``AdaptiveFormat`` is a drop-in placement.  ``admission`` bounds
-        in-flight work per OSD; a cache hit never takes a slot.
-        ``limit`` rides into ``scan_op`` (the node stops decoding at the
-        budget) and keys the result cache.  ``selectivity_hint`` (a
-        semi-join filter's expected surviving fraction) prices the
-        placement only — results are identical either way, so it stays
-        out of the cache key."""
-        key = self.cache_key(frag, columns, predicate, limit)
-        ipc = self.cache.get(key)
+        ``AdaptiveFormat`` is a drop-in placement.  ``ctx`` carries every
+        task option: its admission controller bounds in-flight work per
+        OSD (a cache hit never takes a slot), its ``limit`` rides into
+        ``scan_op`` (the node stops decoding at the budget) and keys the
+        result cache, and its ``selectivity_hint`` (a semi-join filter's
+        expected surviving fraction) prices the placement only — results
+        are identical either way, so it stays out of the cache key.  The
+        tenant identity keys the cache shard and tags the storage call
+        for per-tenant load accounting."""
+        ctx = resolve_context(ctx, legacy)
+        key = self.cache_key(frag, columns, predicate, ctx.limit)
+        ipc = self.cache.get(key, tenant=ctx.tenant)
         if ipc is not None:
             t0 = time.perf_counter()
             tbl = Table.from_ipc(ipc)
@@ -397,41 +477,54 @@ class ScanScheduler:
                              cached=True)
             return tbl, rec
 
-        est = self.estimate(frag, selectivity_hint=selectivity_hint)
-        with self._admit(frag, admission):
+        est = self.estimate(frag, selectivity_hint=ctx.selectivity_hint,
+                            ctx=ctx)
+        with self._admit(frag, ctx):
             if est.where == "osd":
                 try:
                     tbl, rec, ipc = self._scan_osd(frag, columns,
-                                                   predicate, est, limit)
+                                                   predicate, est, ctx)
                 except (OSDDownError, ObjectNotFound):
                     # storage path unavailable (e.g. every replica died
                     # after the estimate): client-side reads via failover
                     with self._lock:
                         self.fallbacks += 1
                     tbl, rec, ipc = self._scan_client(frag, columns,
-                                                      predicate, limit)
+                                                      predicate, ctx)
             else:
                 tbl, rec, ipc = self._scan_client(frag, columns, predicate,
-                                                  limit)
-        self.cache.put(key, ipc)
+                                                  ctx)
+        self._cache_put(key, ipc, ctx)
         return tbl, rec
 
-    def _admit(self, frag: Fragment, admission):
-        if admission is None:
+    def _admit(self, frag: Fragment, ctx: TaskContext):
+        if ctx.admission is None:
             return contextlib.nullcontext()
-        return admission.admit_object(self._object_name(frag))
+        return ctx.admission.admit_object(self._object_name(frag), ctx)
 
-    def _scan_osd(self, frag, columns, predicate, est, limit=None):
+    def _cache_put(self, key: tuple, data: bytes, ctx: TaskContext):
+        budget = None
+        if ctx.registry is not None:
+            budget = ctx.registry.spec(ctx.tenant).cache_bytes
+        self.cache.put(key, data, tenant=ctx.tenant, budget=budget)
+
+    def _scan_osd(self, frag, columns, predicate, est,
+                  ctx: TaskContext | None = None):
+        ctx = ctx if ctx is not None else TaskContext()
+        limit = ctx.limit
         payload = scan_payload(frag, columns, predicate, limit)
         deadline = self._hedge_deadline(est.in_bytes)
         if deadline is None:
             result, osd_id, el = self.doa.call(frag.path, frag.obj_idx,
-                                               "scan_op", payload)
+                                               "scan_op", payload,
+                                               tenant=ctx.tenant,
+                                               lane=ctx.lane)
             hedged = False
         else:
             result, osd_id, el, hedged = self.doa.call_hedged(
                 frag.path, frag.obj_idx, "scan_op", payload,
-                hedge_threshold_s=deadline)
+                hedge_threshold_s=deadline, tenant=ctx.tenant,
+                lane=ctx.lane)
         t0 = time.perf_counter()
         tbl = Table.from_ipc(result)
         client_cpu = time.perf_counter() - t0
@@ -454,9 +547,15 @@ class ScanScheduler:
                          len(tbl), hedged=hedged)
         return tbl, rec, result
 
-    def _scan_client(self, frag, columns, predicate, limit=None):
-        tbl, rec = self._client_fmt.scan_fragment(self.fs, frag, columns,
-                                                  predicate, limit=limit)
+    def _scan_client(self, frag, columns, predicate,
+                     ctx: TaskContext | None = None):
+        ctx = ctx if ctx is not None else TaskContext()
+        # the scheduler already holds this fragment's admission slot:
+        # strip the controller so the client format cannot deadlock
+        # re-admitting against the same OSD
+        tbl, rec = self._client_fmt.scan_fragment(
+            self.fs, frag, columns, predicate,
+            dataclasses.replace(ctx, admission=None))
         ipc = tbl.to_ipc()
         with self._lock:
             self.decisions["client"] += 1
@@ -466,7 +565,7 @@ class ScanScheduler:
         # accelerator decode backend the storage nodes don't have);
         # truncated scans are excluded for the same reason as in
         # _scan_osd
-        if limit is None:
+        if ctx.limit is None:
             self._observe("client", self._frag_bytes(frag), rec.cpu_s,
                           len(ipc))
         return tbl, rec, ipc
@@ -480,18 +579,20 @@ class ScanScheduler:
         return self.cache_key(frag, self._ROWCOUNT_COLS, predicate)
 
     def count_fragment(self, frag: Fragment, predicate: Expr | None,
-                       admission=None) -> tuple[int, TaskRecord]:
+                       ctx: TaskContext | None = None,
+                       **legacy) -> tuple[int, TaskRecord]:
         """COUNT(*) for one fragment with the same placement machinery as
         a scan: priced (with the aggregate's tiny result size), hedged,
         and result-cached — so ``count_rows`` under ``format="adaptive"``
         ships integers, not materialized tables.
 
         Returns (row count, TaskRecord)."""
+        ctx = resolve_context(ctx, legacy)
         if predicate is None:       # metadata answers; no I/O at all
             return frag.num_rows, TaskRecord("client", -1, 0.0, 0, 0.0,
                                              frag.num_rows, cached=True)
         key = self.count_cache_key(frag, predicate)
-        cached = self.cache.get(key)
+        cached = self.cache.get(key, tenant=ctx.tenant)
         if cached is not None:
             n = int(json.loads(cached)["rows"])
             with self._lock:
@@ -501,21 +602,24 @@ class ScanScheduler:
         # an aggregate returns a constant-size payload: the storage-side
         # estimate carries ~no wire cost, so pushdown wins unless the
         # nodes are badly saturated
-        est = self.estimate(frag, out_bytes=32)
-        with self._admit(frag, admission):
+        est = self.estimate(frag, out_bytes=32, ctx=ctx)
+        with self._admit(frag, ctx):
             if est.where == "osd":
                 try:
-                    n, rec, raw = self._count_osd(frag, predicate, est)
+                    n, rec, raw = self._count_osd(frag, predicate, est,
+                                                  ctx)
                 except (OSDDownError, ObjectNotFound):
                     with self._lock:
                         self.fallbacks += 1
-                    n, rec, raw = self._count_client(frag, predicate)
+                    n, rec, raw = self._count_client(frag, predicate, ctx)
             else:
-                n, rec, raw = self._count_client(frag, predicate)
-        self.cache.put(key, raw)
+                n, rec, raw = self._count_client(frag, predicate, ctx)
+        self._cache_put(key, raw, ctx)
         return n, rec
 
-    def _count_osd(self, frag, predicate, est):
+    def _count_osd(self, frag, predicate, est,
+                   ctx: TaskContext | None = None):
+        ctx = ctx if ctx is not None else TaskContext()
         payload: dict = {
             "predicate": predicate.to_json()
             if predicate is not None else None,
@@ -526,12 +630,15 @@ class ScanScheduler:
         deadline = self._hedge_deadline(est.in_bytes)
         if deadline is None:
             raw, osd_id, el = self.doa.call(frag.path, frag.obj_idx,
-                                            "rowcount_op", payload)
+                                            "rowcount_op", payload,
+                                            tenant=ctx.tenant,
+                                            lane=ctx.lane)
             hedged = False
         else:
             raw, osd_id, el, hedged = self.doa.call_hedged(
                 frag.path, frag.obj_idx, "rowcount_op", payload,
-                hedge_threshold_s=deadline)
+                hedge_threshold_s=deadline, tenant=ctx.tenant,
+                lane=ctx.lane)
         n = int(json.loads(raw)["rows"])
         with self._lock:
             self.decisions["osd"] += 1
@@ -547,22 +654,23 @@ class ScanScheduler:
     def aggregate_fragment(self, frag: Fragment, specs, group_by,
                            predicate, *, schema,
                            max_groups: int = DEFAULT_MAX_GROUPS,
-                           admission=None) -> "tuple[AggState, TaskRecord]":
+                           ctx: TaskContext | None = None,
+                           **legacy) -> "tuple[AggState, TaskRecord]":
         """Partial aggregation with the full placement machinery: priced
         with the aggregate's few-byte result size (so pushdown wins
         unless storage is badly saturated), hedged past the straggler
         deadline, and result-cached under the version-keyed LRU keyed by
         the aggregate spec.  Returns (AggState, TaskRecord)."""
+        ctx = resolve_context(ctx, legacy)
         if is_degenerate_count(specs, group_by):
             # the unified executor lowers count_rows to this degenerate
             # aggregate; keep the integer-on-the-wire rowcount machinery
             # (placement-priced, hedged, result-cached)
-            n, rec = self.count_fragment(frag, predicate,
-                                         admission=admission)
+            n, rec = self.count_fragment(frag, predicate, ctx)
             return count_state(n), rec
         key = self.agg_cache_key(frag, specs, group_by, max_groups,
                                  predicate)
-        cached = self.cache.get(key)
+        cached = self.cache.get(key, tenant=ctx.tenant)
         if cached is not None:
             state = AggState.deserialize(cached)
             with self._lock:
@@ -575,36 +683,39 @@ class ScanScheduler:
         # group count capped by the cardinality bound (assume a few dozen
         # when the true cardinality is unknown)
         groups_est = min(max_groups, 64) if group_by else 0
-        est = self.estimate(frag, out_bytes=64 + 48 * groups_est)
-        with self._admit(frag, admission):
+        est = self.estimate(frag, out_bytes=64 + 48 * groups_est, ctx=ctx)
+        with self._admit(frag, ctx):
             if est.where == "osd":
                 try:
                     state, rec = self._agg_osd(frag, specs, group_by,
                                                predicate, est, schema,
-                                               max_groups)
+                                               max_groups, ctx)
                 except (OSDDownError, ObjectNotFound):
                     with self._lock:
                         self.fallbacks += 1
                     state, rec = self._agg_client(frag, specs, group_by,
-                                                  predicate, schema)
+                                                  predicate, schema, ctx)
             else:
                 state, rec = self._agg_client(frag, specs, group_by,
-                                              predicate, schema)
-        self.cache.put(key, state.serialize())
+                                              predicate, schema, ctx)
+        self._cache_put(key, state.serialize(), ctx)
         return state, rec
 
     def _agg_osd(self, frag, specs, group_by, predicate, est, schema,
-                 max_groups):
+                 max_groups, ctx: TaskContext):
         payload = agg_payload(frag, specs, group_by, predicate, max_groups)
         deadline = self._hedge_deadline(est.in_bytes)
         if deadline is None:
             raw, osd_id, el = self.doa.call(frag.path, frag.obj_idx,
-                                            "agg_op", payload)
+                                            "agg_op", payload,
+                                            tenant=ctx.tenant,
+                                            lane=ctx.lane)
             hedged = False
         else:
             raw, osd_id, el, hedged = self.doa.call_hedged(
                 frag.path, frag.obj_idx, "agg_op", payload,
-                hedge_threshold_s=deadline)
+                hedge_threshold_s=deadline, tenant=ctx.tenant,
+                lane=ctx.lane)
         state = parse_agg_reply(raw)
         with self._lock:
             if hedged:
@@ -621,7 +732,9 @@ class ScanScheduler:
             with self._lock:
                 self.spills += 1
             cols = needed_columns(specs, group_by, schema, predicate)
-            tbl, rec, _ = self._scan_osd(frag, cols, predicate, est)
+            tbl, rec, _ = self._scan_osd(frag, cols, predicate, est,
+                                         dataclasses.replace(ctx,
+                                                             limit=None))
             t0 = time.perf_counter()
             state = partial_aggregate(tbl, specs, group_by)
             fold = time.perf_counter() - t0
@@ -636,10 +749,12 @@ class ScanScheduler:
                          hedged=hedged)
         return state, rec
 
-    def _agg_client(self, frag, specs, group_by, predicate, schema):
+    def _agg_client(self, frag, specs, group_by, predicate, schema,
+                    ctx: TaskContext):
         cols = needed_columns(specs, group_by, schema, predicate)
-        tbl, rec = self._client_fmt.scan_fragment(self.fs, frag, cols,
-                                                  predicate)
+        tbl, rec = self._client_fmt.scan_fragment(
+            self.fs, frag, cols, predicate,
+            dataclasses.replace(ctx, admission=None, limit=None))
         t0 = time.perf_counter()
         state = partial_aggregate(tbl, specs, group_by)
         fold = time.perf_counter() - t0
@@ -649,13 +764,15 @@ class ScanScheduler:
                                  rec.wire_bytes,
                                  rec.client_cpu_s + fold, state.rows)
 
-    def _count_client(self, frag, predicate):
+    def _count_client(self, frag, predicate, ctx: TaskContext | None = None):
         """Fallback count: client-side decode of just the (first)
         predicate column (``count_fragment`` answered the predicate-less
         case from metadata already)."""
+        ctx = ctx if ctx is not None else TaskContext()
         cols = sorted(predicate.columns())[:1]
-        tbl, rec = self._client_fmt.scan_fragment(self.fs, frag, cols,
-                                                  predicate)
+        tbl, rec = self._client_fmt.scan_fragment(
+            self.fs, frag, cols, predicate,
+            dataclasses.replace(ctx, admission=None, limit=None))
         n = len(tbl)
         with self._lock:
             self.decisions["client"] += 1

@@ -50,6 +50,7 @@ storage-side compaction (``compact_op``)
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import secrets
@@ -61,6 +62,7 @@ from repro.aformat.schema import Schema
 from repro.aformat.table import Table
 from repro.dataset.dataset import Dataset
 from repro.dataset.fragment import Fragment
+from repro.dataset.qos import TaskContext, as_task_context
 from repro.storage.cephfs import CephFS
 from repro.storage.layouts import ALIGN, write_flat
 from repro.storage.objstore import ObjectNotFound, VersionConflictError
@@ -470,6 +472,7 @@ class MutableDataset:
         min_fill: float = 0.5,
         codec: str = compression.ZLIB,
         client_fallback: bool = True,
+        tenant=None,
     ) -> CompactionReport:
         """Merge small row groups into right-sized ones, storage-side.
 
@@ -489,7 +492,21 @@ class MutableDataset:
         ``client_fallback=True`` rewrites those groups through the
         client (bytes over the wire, counted in the report), otherwise
         they are skipped this run.
-        """
+
+        Compaction is a first-class *background* tenant: by default
+        every ``compact_op`` runs as tenant ``"compaction"`` on the
+        ``background`` lane, and when ``tenant`` carries a
+        :class:`~repro.dataset.qos.TenantRegistry` context its calls go
+        through the cluster's shared admission controller — maintenance
+        waits behind every foreground scan instead of hitting OSDs
+        ungated."""
+        if tenant is None:
+            ctx = TaskContext(tenant="compaction", lane="background")
+        else:
+            ctx = as_task_context(tenant)
+        if ctx.admission is None and ctx.registry is not None:
+            ctx = dataclasses.replace(
+                ctx, admission=ctx.registry.controller(self.fs.store))
         head, _ = self._read_head()
         report = CompactionReport(snapshot_id=head.snapshot_id)
         groups = self._plan_groups(head, target_rows, min_fill)
@@ -502,7 +519,7 @@ class MutableDataset:
             report.groups += 1
             ok, df = self._compact_group(
                 head, osd_id, group, target_rows, codec, client_fallback,
-                report,
+                report, ctx,
             )
             if not ok:
                 continue  # co-location race, no fallback: victims stay
@@ -610,6 +627,7 @@ class MutableDataset:
         codec: str,
         client_fallback: bool,
         report: CompactionReport,
+        ctx: TaskContext,
     ) -> tuple[bool, DataFile | None]:
         """Rewrite one co-located victim group.  Returns (ok, file):
         ``(True, DataFile)`` on a successful rewrite, ``(True, None)``
@@ -636,10 +654,14 @@ class MutableDataset:
             "codec": codec,
         }
         report.request_bytes += len(json.dumps(payload).encode())
-        raw, _osd_id, _el = self.fs.store.cls_call(
-            sources[0]["name"], "compact_op", payload,
-            prefer_osd=self.fs.store.osds[osd_id],
-        )
+        gate = (ctx.admission.admit(osd_id, ctx)
+                if ctx.admission is not None else contextlib.nullcontext())
+        with gate:
+            raw, _osd_id, _el = self.fs.store.cls_call(
+                sources[0]["name"], "compact_op", payload,
+                prefer_osd=self.fs.store.osds[osd_id],
+                tenant=ctx.tenant, lane=ctx.lane,
+            )
         report.reply_bytes += len(raw)
         reply = json.loads(raw)
         if not reply.get("ok"):

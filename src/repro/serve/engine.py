@@ -22,7 +22,8 @@ import numpy as np
 
 from repro.aformat.table import Table
 from repro.configs.base import ModelConfig
-from repro.dataset import AdaptiveFormat, Dataset, MutableDataset
+from repro.dataset import (AdaptiveFormat, Dataset, MutableDataset,
+                           TaskContext)
 from repro.models import api as model_api
 from repro.models import lm
 from repro.sharding import ShardingCtx
@@ -77,7 +78,8 @@ def append_prompts(store: MutableDataset, requests, *,
 
 def prompt_lengths(ds: "Dataset | MutableDataset", *, format="adaptive",
                    predicate=None, uid_col: str = "uid",
-                   pos_col: str = "pos", num_threads: int = 8):
+                   pos_col: str = "pos", num_threads: int = 8,
+                   tenant=None):
     """Per-uid prompt lengths via grouped COUNT pushdown — the wave
     planner's sizing query.  Where ``ingest_prompts`` must ship token
     columns, this ships only per-uid partial counts (``agg_op``), so an
@@ -89,7 +91,8 @@ def prompt_lengths(ds: "Dataset | MutableDataset", *, format="adaptive",
     if not pinned.fragments():       # nothing committed yet
         from repro.dataset.plan import ScanMetrics
         return {}, ScanMetrics()
-    q = pinned.query(format=format, num_threads=num_threads)
+    q = pinned.query(format=format, num_threads=num_threads,
+                     tenant=tenant)
     if predicate is not None:
         q = q.filter(predicate)
     q = q.aggregate([("count", pos_col)], group_by=uid_col)
@@ -103,7 +106,8 @@ def ingest_prompts(ds: "Dataset | MutableDataset", *, format="adaptive",
                    predicate=None, uid_col: str = "uid",
                    pos_col: str = "pos", token_col: str = "token",
                    max_new_tokens: int = 32, eos_id: int = -1,
-                   num_threads: int = 8, decode_backend=None):
+                   num_threads: int = 8, decode_backend=None,
+                   tenant=None):
     """Scan a columnar prompt store into serving Requests.
 
     The dataset holds one row per prompt token: (uid, pos, token).  The
@@ -128,7 +132,7 @@ def ingest_prompts(ds: "Dataset | MutableDataset", *, format="adaptive",
     name, not an already-built instance.
     """
     q = _pin(ds).query(format=format, num_threads=num_threads,
-                       decode_backend=decode_backend)
+                       decode_backend=decode_backend, tenant=tenant)
     if predicate is not None:
         q = q.filter(predicate)
     q = q.select(uid_col, pos_col, token_col)
@@ -163,12 +167,17 @@ def ingest_prompts(ds: "Dataset | MutableDataset", *, format="adaptive",
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, mesh, rules, params, *,
                  max_batch: int = 8, pad_id: int = 0,
-                 decode_backend=None):
+                 decode_backend=None, tenant=None):
         self.cfg = cfg
         self.ctx = ShardingCtx(mesh, rules)
         self.params = params
         self.max_batch = max_batch
         self.pad_id = pad_id
+        # serving is the latency-sensitive workload: ingest scans run as
+        # an interactive-lane tenant (pass ``TenantRegistry.context(...)``
+        # to arbitrate against other tenants on the shared controller)
+        self.tenant = (tenant if tenant is not None
+                       else TaskContext(tenant="serve", lane="interactive"))
         self._queue: list[Request] = []
         self.last_ingest_metrics = None     # ScanMetrics of the last ingest
         # one format for the engine's lifetime: its scheduler's result
@@ -207,6 +216,7 @@ class ServeEngine:
         scheduler and enqueue them; scan accounting lands in
         ``self.last_ingest_metrics``.  Returns the number admitted."""
         kwargs.setdefault("format", self._ingest_format)
+        kwargs.setdefault("tenant", self.tenant)
         reqs, metrics = ingest_prompts(ds, **kwargs)
         self.last_ingest_metrics = metrics
         for r in reqs:

@@ -175,19 +175,25 @@ class DirectObjectAccess:
         return self.store.stat(self.fs.object_names(path)[idx])
 
     def call(self, path: str, idx: int, method: str,
-             payload: dict | None = None):
+             payload: dict | None = None, *, tenant: str = "default",
+             lane: str = "bulk"):
         """Invoke an object-class method on the idx-th object of a file.
-        Returns (result_bytes, osd_id, elapsed_s)."""
+        Returns (result_bytes, osd_id, elapsed_s).  ``tenant``/``lane``
+        tag the node's per-tenant in-flight accounting."""
         names = self.fs.object_names(path)
-        return self.store.cls_call(names[idx], method, payload)
+        return self.store.cls_call(names[idx], method, payload,
+                                   tenant=tenant, lane=lane)
 
-    def call_last(self, path: str, method: str, payload=None):
+    def call_last(self, path: str, method: str, payload=None, *,
+                  tenant: str = "default", lane: str = "bulk"):
         names = self.fs.object_names(path)
-        return self.store.cls_call(names[-1], method, payload)
+        return self.store.cls_call(names[-1], method, payload,
+                                   tenant=tenant, lane=lane)
 
     def call_hedged(self, path: str, idx: int, method: str,
                     payload: dict | None = None, *,
-                    hedge_threshold_s: float = 0.05):
+                    hedge_threshold_s: float = 0.05,
+                    tenant: str = "default", lane: str = "bulk"):
         """Straggler-mitigated cls call with *first-wins racing*: issue the
         call on the primary; if it has not completed within the hedge
         deadline, issue the same call on a replica **while the primary is
@@ -209,7 +215,9 @@ class DirectObjectAccess:
         # object (needed up front so the hedge goes somewhere *else*)
         primary = next((o for o in acting
                         if not o.down and o.contains(name)), None)
-        fut1 = _hedge_pool().submit(store.cls_call, name, method, payload)
+        fut1 = _hedge_pool().submit(
+            lambda: store.cls_call(name, method, payload, tenant=tenant,
+                                   lane=lane))
         done, _ = futures_wait([fut1], timeout=hedge_threshold_s)
         if fut1 in done or primary is None:
             result, osd_id, el = fut1.result()   # may raise: no racing yet
@@ -221,8 +229,9 @@ class DirectObjectAccess:
         if backup is None:
             result, osd_id, el = fut1.result()
             return result, osd_id, el, False
-        fut2 = _hedge_pool().submit(store.cls_call, name, method, payload,
-                                    prefer_osd=backup)
+        fut2 = _hedge_pool().submit(
+            lambda: store.cls_call(name, method, payload, prefer_osd=backup,
+                                   tenant=tenant, lane=lane))
 
         pending = {fut1, fut2}
         err: Exception | None = None

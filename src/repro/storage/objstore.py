@@ -86,6 +86,8 @@ class OSDLoad:
     threads: int
     straggle_factor: float
     down: bool = False
+    by_tenant: Any = None       # {(tenant, lane): inflight} snapshot, or None
+    external: int = 0           # simulated external clients' in-flight calls
 
     @property
     def pressure(self) -> float:
@@ -122,6 +124,10 @@ class OSD:
                                      # service times without actually
                                      # sleeping them out
         self.inflight = 0            # cls calls queued + executing
+        self.inflight_tags: dict[tuple[str, str], int] = {}
+                                     # in-flight split by (tenant, lane) —
+                                     # the per-tenant load signal behind
+                                     # lane-visible placement pricing
         self.background_load = 0     # simulated external clients' in-flight
                                      # cls calls (multi-tenant benchmarks)
         self._cls_sem = threading.BoundedSemaphore(max(1, threads))
@@ -345,9 +351,11 @@ class ObjectStore:
         expected service-time inflation the scan scheduler compares against
         a client-side scan."""
         o = self.osds[osd] if isinstance(osd, int) else osd
+        with o._lock:
+            tags = dict(o.inflight_tags) if o.inflight_tags else None
         return OSDLoad(o.osd_id, o.stats.busy_s,
                        o.inflight + o.background_load, o.threads,
-                       o.straggle_factor, o.down)
+                       o.straggle_factor, o.down, tags, o.background_load)
 
     def list_objects(self) -> list[str]:
         names: set[str] = set()
@@ -361,19 +369,26 @@ class ObjectStore:
         self._cls[method] = fn
 
     def cls_call(self, name: str, method: str, payload: dict | None = None,
-                 *, prefer_osd: OSD | None = None) -> Any:
+                 *, prefer_osd: OSD | None = None, tenant: str = "default",
+                 lane: str = "bulk") -> Any:
         """Execute a registered object-class method ON the storage node
-        holding the object.  Returns (result, osd_id, elapsed_s)."""
+        holding the object.  Returns (result, osd_id, elapsed_s).
+
+        ``tenant``/``lane`` tag the call in the node's per-tenant in-flight
+        accounting (``OSD.inflight_tags``, snapshotted by :meth:`load_of`)
+        so placement pricing can see *whose* work is queued where."""
         if method not in self._cls:
             raise KeyError(f"no object class method {method!r}")
         acting = self.acting_set(name)
         candidates = ([prefer_osd] if prefer_osd is not None else []) + acting
         err: Exception | None = None
+        tag = (tenant, lane)
         for osd in candidates:
             if osd.down or not osd.contains(name):
                 continue
             with osd._lock:          # queued: visible to load_of immediately
                 osd.inflight += 1
+                osd.inflight_tags[tag] = osd.inflight_tags.get(tag, 0) + 1
             try:
                 with osd._cls_sem:   # per-OSD concurrency = thread count
                     t0 = time.perf_counter()
@@ -393,6 +408,11 @@ class ObjectStore:
             finally:
                 with osd._lock:
                     osd.inflight -= 1
+                    n = osd.inflight_tags.get(tag, 0) - 1
+                    if n > 0:
+                        osd.inflight_tags[tag] = n
+                    else:
+                        osd.inflight_tags.pop(tag, None)
             osd.stats.cls_calls += 1
             osd.stats.busy_s += el
             if isinstance(result, (bytes, bytearray)):

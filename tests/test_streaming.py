@@ -39,7 +39,7 @@ class _CountingFormat(ParquetFormat):
         self.peak = 0
         self._lock = threading.Lock()
 
-    def scan_fragment(self, fs, frag, columns, predicate, admission=None):
+    def scan_fragment(self, fs, frag, columns, predicate, ctx=None):
         with self._lock:
             self.started += 1
             self.inflight += 1
@@ -47,8 +47,7 @@ class _CountingFormat(ParquetFormat):
         try:
             if self.delay_s:
                 time.sleep(self.delay_s)
-            return super().scan_fragment(fs, frag, columns, predicate,
-                                         admission=admission)
+            return super().scan_fragment(fs, frag, columns, predicate, ctx)
         finally:
             with self._lock:
                 self.inflight -= 1
