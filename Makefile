@@ -5,7 +5,7 @@ export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-fast test-cov lint bench bench-adaptive bench-aggregate \
 	bench-compact bench-decode bench-fig5 bench-fig6 bench-hedged \
-	bench-join bench-limit bench-qos bench-smoke deps
+	bench-ingest bench-join bench-limit bench-qos bench-smoke deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -23,6 +23,7 @@ test-fast:
 test-cov:
 	$(PYTHON) -m pytest -q -m "not slow" \
 		--cov=repro.dataset --cov=repro.aformat --cov=repro.kernels \
+		--cov=repro.ingest --cov=repro.data \
 		--cov-report=term-missing:skip-covered --cov-fail-under=85
 
 # ruff config lives in ruff.toml (correctness rules everywhere; the
@@ -40,12 +41,18 @@ bench-smoke:
 	$(PYTHON) benchmarks/bench_smoke.py
 
 bench: bench-fig5 bench-fig6 bench-adaptive bench-hedged bench-aggregate \
-	bench-limit bench-compact bench-join bench-decode bench-qos
+	bench-limit bench-compact bench-join bench-decode bench-qos \
+	bench-ingest
 
 # multi-tenant QoS: interactive p99 under a hostile bulk fleet, with and
 # without the shared weighted-fair admission plane
 bench-qos:
 	$(PYTHON) benchmarks/multi_tenant.py
+
+# distributed training ingest: sharded checkpointable readers — host-CPU
+# and wire-byte placement comparison, resume exactness, QoS coexistence
+bench-ingest:
+	$(PYTHON) benchmarks/ingest_train.py
 
 # client decode plane: NumPy vs Pallas backends (byte-identity, roofline
 # rates, placement-crossover shift)

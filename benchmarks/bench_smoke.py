@@ -125,6 +125,20 @@ def run_multi_tenant_small() -> dict:
     return out
 
 
+def run_ingest_train_small() -> dict:
+    from benchmarks import ingest_train
+    # small config: fewer train steps and a smaller corpus; all five
+    # arms (both placements, resume-exactness, QoS coexistence) run
+    ingest_train.STEPS = 6
+    ingest_train.DOCS = 300
+    ingest_train.QOS_QUERIES = 2
+    t0 = time.perf_counter()
+    out = ingest_train.run()
+    out["wall_s"] = time.perf_counter() - t0
+    out["small_config"] = True
+    return out
+
+
 def run_kernels() -> dict:
     from benchmarks import kernel_bench
     t0 = time.perf_counter()
@@ -149,6 +163,7 @@ BENCHES = {
     "semi_join": run_semi_join_small,
     "decode_backend": run_decode_backend_small,
     "multi_tenant": run_multi_tenant_small,
+    "ingest_train": run_ingest_train_small,
     "kernels": run_kernels,
 }
 

@@ -1,14 +1,21 @@
-"""Training-ingest end-to-end: pushdown vs client scan feeding train_step.
+"""Training-ingest end-to-end: the sharded reader feeding train_step.
 
-The TPU-fleet adaptation of the paper (DESIGN.md §2): a training host must
-keep an accelerator fed from columnar shards under a quality-filter
-predicate.  We train a real (tiny) model for a few steps per placement and
-account (a) host CPU burned on ingest, (b) wire bytes into the host,
-(c) ingest stall time per step with the double-buffered prefetcher.
+The TPU-fleet adaptation of the paper (DESIGN.md §2): a training host
+must keep an accelerator fed from columnar shards under a quality-filter
+predicate.  We train a real (tiny) model for a few steps per placement
+through ``repro.ingest.ShardedReader`` — every scan goes through the
+query plan, the shared streaming executor, and a registered bulk-lane
+ingest tenant — and account (a) host CPU burned on ingest, (b) wire
+bytes into the host, (c) ingest stall time per step with the
+double-buffered prefetcher.
 
-Claim (the paper's, transposed): pushdown moves filter/decode CPU off the
-training host, and under selective predicates cuts wire bytes — the host
-stops being the input bottleneck.
+Claims (the paper's, transposed, plus the reader's own contracts):
+pushdown moves filter/decode CPU off the training host and under a
+selective predicate ships a fraction of the client-scan wire bytes; both
+placements train identically (same deterministic batch stream); a reader
+restored from its checkpointed ``ReaderState`` continues byte-for-byte;
+and ingest-as-tenant coexists with an interactive scanner without
+shedding it.
 """
 
 from __future__ import annotations
@@ -22,16 +29,22 @@ import numpy as np
 
 from benchmarks.common import save_result
 from repro.aformat.expressions import field
+from repro.aformat.table import Table
 from repro.configs import smoke_config
 from repro.core import dataset, make_cluster
-from repro.data import PipelineConfig, TokenPipeline, synth_corpus, \
-    write_corpus
+from repro.data import synth_corpus, write_corpus
+from repro.dataset.qos import TenantRegistry
+from repro.ingest import ReaderConfig, ReaderState, ShardedReader
 from repro.launch.mesh import make_local_mesh
 from repro.sharding import default_rules
 from repro.train import optim, step as step_mod
 
 STEPS = 12
+DOCS = 800
 SEQ, BATCH = 128, 8
+RESUME_BATCHES = 8          # length of the resume-exactness probe
+RESUME_CUT = 4              # checkpoint/kill after this many
+QOS_QUERIES = 4             # interactive queries raced against ingest
 
 
 def _model():
@@ -48,9 +61,92 @@ def _model():
     return cfg, state, fn
 
 
+def _reader_cfg(fmt: str, pred, **kw) -> ReaderConfig:
+    return ReaderConfig(seq_len=SEQ, local_batch=BATCH, predicate=pred,
+                        format=fmt, num_threads=1, prefetch=2, seed=7,
+                        **kw)
+
+
+def _resume_arm(ds, pred) -> dict:
+    """Cut the stream at RESUME_CUT, round-trip the state through its
+    array encoding (what CheckpointManager stores), restore, and compare
+    the continuation byte-for-byte against an uninterrupted run."""
+    cfg = _reader_cfg("pushdown", pred)
+    ref = ShardedReader(ds, cfg)
+    full = [next(ref) for _ in range(RESUME_BATCHES)]
+    ref.close()
+
+    a = ShardedReader(ds, cfg)
+    head = [next(a) for _ in range(RESUME_CUT)]
+    arrays = a.checkpoint().to_arrays()
+    a.close()  # the kill: prefetched-but-undelivered batches are lost
+
+    b = ShardedReader(ds, cfg,
+                      state=ReaderState.from_arrays(arrays))
+    tail = [next(b) for _ in range(RESUME_BATCHES - RESUME_CUT)]
+    b.close()
+
+    resumed = head + tail
+    exact = all(
+        np.array_equal(x["tokens"], y["tokens"])
+        and np.array_equal(x["labels"], y["labels"])
+        for x, y in zip(resumed, full))
+    return {"batches": RESUME_BATCHES, "cut_at": RESUME_CUT,
+            "byte_identical": bool(exact)}
+
+
+def _qos_arm(ds, pred) -> dict:
+    """Train through a registered bulk ingest tenant while an
+    interactive tenant runs deadline-carrying scans on the same
+    cluster; count sheds (target: zero)."""
+    import threading
+
+    registry = TenantRegistry(slots_per_osd=2)
+    registry.register("dash", weight=4.0, lane="interactive",
+                      deadline_s=5.0)
+    reader = ShardedReader(ds, _reader_cfg("pushdown", pred,
+                                           registry=registry))
+    stop = threading.Event()
+
+    def churn():
+        try:
+            while not stop.is_set():
+                next(reader)
+        except StopIteration:   # reader.close() ends the stream
+            pass
+
+    t = threading.Thread(target=churn, daemon=True)
+    t.start()
+    completed = sheds = 0
+    lat = []
+    try:
+        for _ in range(QOS_QUERIES):
+            t0 = time.perf_counter()
+            out = ds.query(tenant=registry.context("dash"),
+                           num_threads=2).filter(
+                field("quality") > 0.5).select("token").to_table()
+            lat.append(time.perf_counter() - t0)
+            if isinstance(out, Table):
+                completed += 1
+            else:
+                sheds += 1
+    finally:
+        stop.set()
+        reader.close()
+        t.join(timeout=10.0)
+    ing = reader.stats()
+    return {"interactive_queries": QOS_QUERIES,
+            "interactive_completed": completed,
+            "interactive_sheds": sheds,
+            "interactive_p_max_ms": round(max(lat) * 1e3, 1),
+            "ingest_batches": ing["batches"],
+            "ingest_rows": ing["rows"],
+            "tenants_seen": sorted(registry.by_tenant())}
+
+
 def run() -> dict:
     fs = make_cluster(8)
-    corpus = synth_corpus(800, mean_doc_len=400, vocab_size=4096, seed=0)
+    corpus = synth_corpus(DOCS, mean_doc_len=400, vocab_size=4096, seed=0)
     write_corpus(fs, "/corpus", corpus, num_shards=8,
                  row_group_rows=16384)
     ds = dataset(fs, "/corpus")
@@ -60,23 +156,20 @@ def run() -> dict:
 
     for fmt in ("parquet", "pushdown"):
         cfg, state, fn = _model()
-        pcfg = PipelineConfig(seq_len=SEQ, local_batch=BATCH,
-                              predicate=pred, format=fmt, num_threads=1,
-                              prefetch=2, seed=7)
-        pipe = TokenPipeline(ds, pcfg)
-        it = iter(pipe)
+        reader = ShardedReader(ds, _reader_cfg(fmt, pred))
         stall_s = 0.0
         t_start = time.perf_counter()
         loss = None
         for _ in range(STEPS):
             t0 = time.perf_counter()
-            batch = next(it)
+            batch = next(reader)
             stall_s += time.perf_counter() - t0
             state, mets = fn(state, {k: jnp.asarray(v)
                                      for k, v in batch.items()})
         loss = float(mets["loss"])
         wall = time.perf_counter() - t_start
-        st = pipe.stats()
+        st = reader.stats()
+        reader.close()
         out["formats"][fmt] = {
             "host_ingest_cpu_s": st["client_cpu_s"],
             "storage_cpu_s": st["osd_cpu_s"],
@@ -86,16 +179,29 @@ def run() -> dict:
             "final_loss": round(loss, 4),
             "tokens_trained": STEPS * SEQ * BATCH,
         }
+
+    out["resume"] = _resume_arm(ds, pred)
+    out["qos"] = _qos_arm(ds, pred)
+    out["claims"] = check_claims(out)
+    return out
+
+
+def check_claims(out: dict) -> list[str]:
     pq, pd = out["formats"]["parquet"], out["formats"]["pushdown"]
-    out["claims"] = [
+    rs, qos = out["resume"], out["qos"]
+    return [
         f"{'PASS' if pd['host_ingest_cpu_s'] < pq['host_ingest_cpu_s'] * 0.5 else 'FAIL'}"
         "  pushdown cuts host ingest CPU by >2x",
-        f"{'PASS' if pd['wire_mb'] < pq['wire_mb'] else 'FAIL'}"
-        "  selective pushdown ships fewer bytes to the host",
+        f"{'PASS' if pd['wire_mb'] < pq['wire_mb'] * 0.5 else 'FAIL'}"
+        "  selective pushdown ships <0.5x the client-scan wire bytes",
         f"{'PASS' if abs(pd['final_loss'] - pq['final_loss']) < 0.2 else 'FAIL'}"
         "  both placements train identically (same data order)",
+        f"{'PASS' if rs['byte_identical'] else 'FAIL'}"
+        f"  restored reader replays batches {rs['cut_at'] + 1}.."
+        f"{rs['batches']} byte-identically (resume exactness)",
+        f"{'PASS' if qos['interactive_sheds'] == 0 and qos['interactive_completed'] == qos['interactive_queries'] else 'FAIL'}"
+        "  ingest-as-tenant sheds no interactive queries",
     ]
-    return out
 
 
 def main():
@@ -107,6 +213,12 @@ def main():
         print(f"{fmt:9s} host_cpu={r['host_ingest_cpu_s']}s "
               f"storage_cpu={r['storage_cpu_s']}s wire={r['wire_mb']}MB "
               f"stall={r['ingest_stall_s']}s loss={r['final_loss']}")
+    print(f"resume    cut@{out['resume']['cut_at']} "
+          f"byte_identical={out['resume']['byte_identical']}")
+    print(f"qos       interactive {out['qos']['interactive_completed']}/"
+          f"{out['qos']['interactive_queries']} completed, "
+          f"{out['qos']['interactive_sheds']} shed, ingest streamed "
+          f"{out['qos']['ingest_batches']} batches")
     for line in out["claims"]:
         print(line)
     return out

@@ -21,9 +21,9 @@ import numpy as np
 from repro.aformat.expressions import field
 from repro.configs import smoke_config
 from repro.core import dataset, make_cluster
-from repro.data import PipelineConfig, TokenPipeline, synth_corpus, \
-    write_corpus
+from repro.data import synth_corpus, write_corpus
 from repro.distrib import CheckpointManager
+from repro.ingest import ReaderConfig, ShardedReader
 from repro.launch.mesh import make_local_mesh
 from repro.launch.train import build_training
 from repro.sharding import default_rules
@@ -44,7 +44,7 @@ def main():
                           seed=0, distribution="zipf")
     write_corpus(fs, "/corpus", corpus, num_shards=8, row_group_rows=16384)
     ds = dataset(fs, "/corpus")
-    pipe = TokenPipeline(ds, PipelineConfig(
+    reader = ShardedReader(ds, ReaderConfig(
         seq_len=args.seq, local_batch=args.batch,
         predicate=field("quality") > 0.3, format="pushdown",
         num_threads=2))
@@ -62,10 +62,9 @@ def main():
     cm = CheckpointManager(fs, "/ckpt", keep=2)
 
     losses = []
-    it = iter(pipe)
     t0 = time.perf_counter()
     for step in range(1, args.steps + 1):
-        batch = next(it)
+        batch = next(reader)
         state, mets = fn(state, {k: jnp.asarray(v)
                                  for k, v in batch.items()})
         losses.append(float(mets["loss"]))
@@ -75,14 +74,19 @@ def main():
                   f"tok/s {toks / (time.perf_counter() - t0):8.0f}",
                   flush=True)
         if step % 100 == 0:
-            cm.save_async(state, step)
+            # model and reader cut land in one commit (see --resume in
+            # repro.launch.train for restoring both)
+            cm.save_async({"model": state,
+                           "reader": reader.checkpoint().to_arrays()},
+                          step)
     cm.wait()
+    reader.close()
 
     first, last = np.mean(losses[:10]), np.mean(losses[-10:])
     print(f"\nloss {first:.3f} -> {last:.3f} "
           f"(uniform entropy would be {np.log(args.vocab):.3f})")
     print(f"checkpoints in object store: {cm.steps()}")
-    print("ingest:", pipe.stats())
+    print("ingest:", reader.stats())
     assert last < first - 0.5, "model failed to learn the Zipf unigrams"
     print("OK: loss fell well below the initial cross-entropy")
 

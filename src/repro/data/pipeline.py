@@ -1,28 +1,29 @@
-"""Training ingest: per-DP-rank pushdown scans -> host packing -> device.
+"""Training ingest (deprecated shim): ``TokenPipeline`` over the new
+sharded reader.
 
-Each data-parallel rank owns a disjoint subset of the corpus fragments
-(round-robin over the sorted fragment list — the multi-host analogue of the
-paper's single client).  Fragments are scanned through the Dataset API with
-whichever FileFormat placement the run selects, filtered tokens are packed
-into fixed (local_batch, seq_len+1) arrays, and a double-buffered
-background prefetcher overlaps the next batch's scan with the current
-step's compute — the compute/IO-overlap trick at the heart of keeping a
-197-TFLOP/s chip fed by a storage-limited input path.
+The real ingest plane now lives in :mod:`repro.ingest` —
+``ShardedReader`` runs every scan through the query plan (stats pruning,
+projection pushdown, the shared streaming executor, QoS admission) and
+is checkpointable and elastic.  ``TokenPipeline`` remains for one
+release as a thin wrapper that preserves the historic constructor and
+iterator surface, with one behavior fix: a rank with no fragments is a
+legal empty shard (it yields nothing) instead of a crash, so a fleet
+with more ranks than fragments stays up.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import queue
-import threading
+import warnings
 from typing import Iterator
 
 import numpy as np
 
-from repro.aformat.expressions import ALL, NONE, Expr
+from repro.aformat.expressions import Expr
 from repro.dataset.dataset import Dataset
 from repro.dataset.format import (FileFormat, ParquetFormat,
-                                  PushdownParquetFormat, TaskRecord)
+                                  PushdownParquetFormat)
+from repro.ingest.reader import Prefetcher, ReaderConfig, ShardedReader
 
 
 @dataclasses.dataclass
@@ -45,109 +46,48 @@ def _make_format(cfg: PipelineConfig) -> FileFormat:
 
 
 class TokenPipeline:
-    """Iterator of {"tokens","labels"} host batches for one DP rank."""
+    """Deprecated: use :class:`repro.ingest.ShardedReader`.
+
+    Iterator of {"tokens","labels"} host batches for one DP rank,
+    now backed by the sharded reader (same packing, same shapes; shard
+    assignment is row-balanced rather than round-robin)."""
 
     def __init__(self, ds: Dataset, cfg: PipelineConfig, *,
                  dp_rank: int = 0, dp_size: int = 1):
+        warnings.warn(
+            "TokenPipeline is deprecated; use repro.ingest.ShardedReader "
+            "(sharded, checkpointable, elastic, QoS-aware)",
+            DeprecationWarning, stacklevel=2)
         if not (0 <= dp_rank < dp_size):
             raise ValueError("bad dp_rank/dp_size")
         self.ds = ds
         self.cfg = cfg
-        self.fmt = _make_format(cfg)
-        frags = sorted(ds.fragments(), key=lambda f: (f.path, f.obj_idx,
-                                                      f.rg_in_object))
-        self.fragments = frags[dp_rank::dp_size]
-        if not self.fragments:
-            raise ValueError(f"rank {dp_rank}: no fragments")
-        self.records: list[TaskRecord] = []
-        self._lock = threading.Lock()
-
-    # -- fragment-level scan ----------------------------------------------------
-    def _scan(self, frag) -> np.ndarray:
-        pred = self.cfg.predicate
-        if pred is not None and frag.stats:
-            verdict = pred.prune(frag.stats)
-            if verdict == NONE:
-                return np.empty(0, np.int32)
-            if verdict == ALL:
-                pred = None
-        tbl, rec = self.fmt.scan_fragment(self.ds.fs, frag, ["token"], pred)
-        with self._lock:
-            self.records.append(rec)
-        return np.ascontiguousarray(tbl.column("token").values, np.int32)
-
-    # -- epoch stream -------------------------------------------------------------
-    def _token_stream(self) -> Iterator[np.ndarray]:
-        rng = np.random.default_rng(self.cfg.seed)
-        epoch = 0
-        while True:
-            order = rng.permutation(len(self.fragments))
-            for i in order:
-                toks = self._scan(self.fragments[i])
-                if len(toks):
-                    yield toks
-            epoch += 1
+        rcfg = ReaderConfig(
+            seq_len=cfg.seq_len, local_batch=cfg.local_batch,
+            predicate=cfg.predicate, format=_make_format(cfg),
+            num_threads=cfg.num_threads, queue_depth=cfg.queue_depth,
+            seed=cfg.seed, prefetch=cfg.prefetch)
+        self.reader = ShardedReader(ds, rcfg, dp_rank=dp_rank,
+                                    dp_size=dp_size)
+        self.fmt = self.reader.fmt
+        self.fragments = [t.fragment for t in self.reader.shard_tasks]
 
     def batches(self) -> Iterator[dict[str, np.ndarray]]:
         """Pack the filtered token stream into (B, S) token/label pairs."""
-        need = self.cfg.local_batch * (self.cfg.seq_len + 1)
-        buf = np.empty(0, np.int32)
-        for toks in self._token_stream():
-            buf = np.concatenate([buf, toks]) if len(buf) else toks
-            while len(buf) >= need:
-                chunk = buf[:need].reshape(self.cfg.local_batch,
-                                           self.cfg.seq_len + 1)
-                buf = buf[need:]
-                yield {"tokens": np.ascontiguousarray(chunk[:, :-1]),
-                       "labels": np.ascontiguousarray(chunk[:, 1:])}
+        for batch, _state in self.reader.batches():
+            yield batch
 
     def __iter__(self):
         return Prefetcher(self.batches(), self.cfg.prefetch)
 
+    def close(self):
+        self.reader.close()
+
     # -- accounting ----------------------------------------------------------------
     def stats(self) -> dict:
-        recs = self.records
-        return {
-            "fragments_scanned": len(recs),
-            "client_cpu_s": round(sum(r.client_cpu_s for r in recs), 4),
-            "osd_cpu_s": round(sum(r.cpu_s for r in recs
-                                   if r.where == "osd"), 4),
-            "wire_bytes": sum(r.wire_bytes for r in recs),
-            "rows": sum(r.rows_out for r in recs),
-        }
-
-
-class Prefetcher:
-    """Double-buffered background prefetch (compute/IO overlap)."""
-
-    _SENTINEL = object()
-
-    def __init__(self, it: Iterator, depth: int = 2):
-        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
-        self._err: BaseException | None = None
-        self._thread = threading.Thread(target=self._run, args=(it,),
-                                        daemon=True)
-        self._thread.start()
-
-    def _run(self, it):
-        try:
-            for item in it:
-                self._q.put(item)
-        except BaseException as e:  # noqa: BLE001 — re-raised on main thread
-            self._err = e
-        finally:
-            self._q.put(self._SENTINEL)
-
-    def __iter__(self):
-        return self
-
-    def __next__(self):
-        item = self._q.get()
-        if item is self._SENTINEL:
-            if self._err is not None:
-                raise self._err
-            raise StopIteration
-        return item
+        d = self.reader.stats()
+        return {k: d[k] for k in ("fragments_scanned", "client_cpu_s",
+                                  "osd_cpu_s", "wire_bytes", "rows")}
 
 
 def device_put_batch(batch: dict[str, np.ndarray], mesh, rules):

@@ -36,6 +36,7 @@ state — the debugging and benchmarking surface for all of the above.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
@@ -505,6 +506,43 @@ class PhysicalPlan:
     metadata_answers: int = 0
     fragments_total: int = 0
     fragments_pruned: int = 0
+
+
+def partition_tasks(
+    tasks: Sequence[FragmentTask], dp_size: int
+) -> list[list[int]]:
+    """Deterministic row-balanced partition of a plan's task list across
+    ``dp_size`` data-parallel shards.
+
+    Greedy LPT on ``fragment.num_rows``: tasks are placed largest-first
+    onto the currently lightest shard, so shard loads stay within one
+    fragment of each other without any coordination.  Ties break on
+    shard index and task index, making the assignment a pure function of
+    (task row counts, dp_size) — every rank computes the same partition
+    independently, which is what lets a restored or re-sharded reader
+    reproduce it exactly.
+
+    Returns per-shard lists of *indices into* ``tasks``, each sorted
+    ascending (plan order within a shard).  Empty shards are legal:
+    with fewer tasks than shards the tail shards simply get ``[]``.
+    """
+    if dp_size <= 0:
+        raise ValueError(f"dp_size must be >= 1, got {dp_size}")
+    shards: list[list[int]] = [[] for _ in range(dp_size)]
+    if not tasks:
+        return shards
+    order = sorted(
+        range(len(tasks)),
+        key=lambda i: (-tasks[i].fragment.num_rows, i),
+    )
+    heap = [(0, s) for s in range(dp_size)]  # (rows assigned, shard idx)
+    for i in order:
+        rows, s = heapq.heappop(heap)
+        shards[s].append(i)
+        heapq.heappush(heap, (rows + tasks[i].fragment.num_rows, s))
+    for shard in shards:
+        shard.sort()
+    return shards
 
 
 def lower(root: PlanNode) -> PhysicalPlan:

@@ -33,10 +33,16 @@ from typing import Any
 from repro.dataset.admission import (AdmissionController, DEFAULT_LANE,
                                      LANES)
 
-__all__ = ["LANES", "Shed", "TaskContext", "TenantRegistry", "TenantSpec",
-           "as_task_context", "resolve_context"]
+__all__ = ["INGEST_TENANT", "LANES", "Shed", "TaskContext", "TenantRegistry",
+           "TenantSpec", "as_task_context", "ingest_context",
+           "resolve_context"]
 
 _UNSET = object()
+
+#: The tenant name training ingest runs as by default — a bulk-lane
+#: large-batch reader that weighted-fair admission arbitrates against
+#: interactive scanners (see :func:`ingest_context`).
+INGEST_TENANT = "ingest"
 
 
 @dataclasses.dataclass
@@ -144,6 +150,16 @@ class TenantRegistry:
             self._specs[name] = spec
         return spec
 
+    def ensure(self, name: str, **kwargs) -> TenantSpec:
+        """``register()`` if the tenant is not yet known, else the
+        existing spec unchanged — idempotent registration for callers
+        (like the ingest reader) that may race or restart."""
+        with self._lock:
+            spec = self._specs.get(name)
+        if spec is not None:
+            return spec
+        return self.register(name, **kwargs)
+
     def spec(self, name: str) -> TenantSpec:
         """The registered spec, or an unweighted bulk default for an
         unknown tenant (unregistered traffic is assumed analytics)."""
@@ -209,6 +225,21 @@ class TenantRegistry:
                     adm[k] = round(adm[k] + v, 6) if k == "wait_s" \
                         else adm[k] + v
         return out
+
+
+def ingest_context(registry: TenantRegistry | None = None, *,
+                   tenant: str = INGEST_TENANT,
+                   weight: float = 1.0) -> TaskContext:
+    """The TaskContext a training reader scans under: a ``bulk``-lane
+    tenant.  With a registry, the tenant is (idempotently) registered
+    and the context carries the registry, so ingest admission goes
+    through the cluster's shared weighted-fair controller and interactive
+    tenants keep their priority-lane edge.  Without one, a standalone
+    bulk context (run-private admission, historic behavior)."""
+    if registry is None:
+        return TaskContext(tenant=tenant, lane="bulk", weight=weight)
+    registry.ensure(tenant, weight=weight, lane="bulk")
+    return registry.context(tenant)
 
 
 def as_task_context(value) -> TaskContext:

@@ -1,9 +1,9 @@
-from repro.distrib.checkpoint import CheckpointManager
+from repro.distrib.checkpoint import ANY_SHAPE, CheckpointManager
 from repro.distrib.elastic import (DownsizePlan, HealthMonitor,
                                    InsufficientDevicesError, build_mesh,
                                    elastic_downsize, plan_downsize,
                                    remesh_state)
 
-__all__ = ["CheckpointManager", "DownsizePlan", "HealthMonitor",
+__all__ = ["ANY_SHAPE", "CheckpointManager", "DownsizePlan", "HealthMonitor",
            "InsufficientDevicesError", "build_mesh", "elastic_downsize",
            "plan_downsize", "remesh_state"]

@@ -27,6 +27,23 @@ from repro.storage.cephfs import CephFS
 STRIPE = 4 * 1024 * 1024
 
 
+class _AnyLeaf:
+    """Restore-struct placeholder accepting any shape/dtype — for
+    variable-length leaves (e.g. a reader's packing-buffer remainder)
+    whose saved shape cannot be known before the manifest is read."""
+
+    __slots__ = ()
+
+    def __repr__(self):
+        return "ANY_SHAPE"
+
+
+#: Put this in a ``restore()`` structs pytree where an exact
+#: shape/dtype template is impossible; the leaf restores to whatever
+#: the checkpoint holds (CRC still verified).
+ANY_SHAPE = _AnyLeaf()
+
+
 def _leaf_name(path) -> str:
     key = jax.tree_util.keystr(path)
     return re.sub(r"[^A-Za-z0-9_.-]+", "_", key).strip("_") or "root"
@@ -140,6 +157,8 @@ class CheckpointManager:
                 raise IOError(f"CRC mismatch restoring {key}")
             arr = np.frombuffer(data, np.dtype(e["dtype"])).reshape(
                 e["shape"])
+            if isinstance(struct, _AnyLeaf):
+                return arr
             if tuple(arr.shape) != tuple(struct.shape) or \
                     arr.dtype != struct.dtype:
                 raise ValueError(

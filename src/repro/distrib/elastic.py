@@ -69,6 +69,11 @@ class DownsizePlan:
     def changed(self) -> bool:
         return self.old_shape != self.new_shape
 
+    def axis_size(self, name: str) -> int:
+        """Post-downsize size of one mesh axis — e.g. the new dp_size
+        that ``repro.ingest.reshard_states`` re-partitions readers to."""
+        return self.new_shape[self.axis_names.index(name)]
+
 
 def plan_downsize(mesh: Mesh, healthy_devices: int, *,
                   shrink_axis: str = "data") -> DownsizePlan:

@@ -1,0 +1,132 @@
+"""Checkpointable reader state: resume an ingest stream byte-for-byte.
+
+A :class:`ReaderState` is everything a sharded reader needs to reproduce
+the *exact* batch stream from a cut point:
+
+snapshot id
+    Mutable datasets are pinned with ``as_of(snapshot_id)`` — commits
+    that landed after the reader started (or after a crash) stay
+    invisible, so restore re-plans the identical fragment task list.
+
+epoch + seed (the RNG state)
+    Per-epoch fragment order is *derived*, counter-RNG style, from
+    ``default_rng((seed, epoch, dp_rank))`` instead of serializing a
+    generator's internal state — the pair (seed, epoch) IS the RNG
+    state, and any process can recompute the permutation.
+
+cursor
+    How many fragments of the current epoch order have been fully
+    scanned into the packing buffer.
+
+packing buffer
+    Tokens already scanned but not yet emitted as a full
+    ``(local_batch, seq_len+1)`` batch.  Variable length — which is why
+    :meth:`restore_structs` uses the checkpoint layer's shape-free
+    ``ANY_SHAPE`` placeholder.
+
+override
+    After an elastic re-shard (``repro.ingest.reshard_states``), the
+    explicit remainder task order this rank must finish before resuming
+    normal epoch sharding.  Encoded as indices into the canonical
+    (plan-order) task list.
+
+States serialize to a flat dict of numpy arrays (:meth:`to_arrays`) so
+:class:`~repro.distrib.checkpoint.CheckpointManager` can save them as
+ordinary pytree leaves alongside the model state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+STATE_VERSION = 1
+
+#: ``meta`` array layout (int64): a versioned fixed-width header so the
+#: whole state round-trips through any pytree-of-arrays checkpointer.
+_META_FIELDS = ("version", "seed", "dp_rank", "dp_size", "epoch",
+                "cursor", "snapshot_id", "n_tasks", "has_override")
+
+
+def _empty_buffer() -> np.ndarray:
+    return np.empty(0, np.int32)
+
+
+@dataclasses.dataclass
+class ReaderState:
+    """One rank's resumable ingest position (see module docstring)."""
+
+    seed: int
+    dp_rank: int
+    dp_size: int
+    epoch: int = 0
+    cursor: int = 0
+    #: Pinned snapshot of a MutableDataset source; -1 = immutable source.
+    snapshot_id: int = -1
+    #: Canonical task-list length, a guard that a restored state is
+    #: replayed against the same plan it was cut from (-1 = unchecked).
+    n_tasks: int = -1
+    buffer: np.ndarray = dataclasses.field(default_factory=_empty_buffer)
+    #: Elastic remainder order (indices into the canonical task list),
+    #: or None when the rank follows its derived epoch order.
+    override: np.ndarray | None = None
+
+    def clone(self) -> "ReaderState":
+        """Deep-enough copy: array fields are copied so a live reader
+        mutating its working state never corrupts a taken checkpoint."""
+        return dataclasses.replace(
+            self,
+            buffer=np.array(self.buffer, np.int32, copy=True),
+            override=None if self.override is None
+            else np.array(self.override, np.int64, copy=True),
+        )
+
+    # -- pytree-of-arrays serialization ------------------------------------
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        """Encode as a flat dict of numpy arrays — checkpointable as
+        ordinary pytree leaves next to the model state."""
+        meta = np.array(
+            [STATE_VERSION, self.seed, self.dp_rank, self.dp_size,
+             self.epoch, self.cursor, self.snapshot_id, self.n_tasks,
+             0 if self.override is None else 1],
+            np.int64,
+        )
+        override = (np.empty(0, np.int64) if self.override is None
+                    else np.asarray(self.override, np.int64))
+        return {"meta": meta,
+                "buffer": np.asarray(self.buffer, np.int32),
+                "override": override}
+
+    @classmethod
+    def from_arrays(cls, arrays: dict) -> "ReaderState":
+        meta = np.asarray(arrays["meta"], np.int64)
+        if len(meta) != len(_META_FIELDS):
+            raise ValueError(
+                f"ReaderState meta has {len(meta)} fields, expected "
+                f"{len(_META_FIELDS)}")
+        d = {k: int(v) for k, v in zip(_META_FIELDS, meta)}
+        if d["version"] != STATE_VERSION:
+            raise ValueError(
+                f"ReaderState version {d['version']} is not "
+                f"{STATE_VERSION}")
+        override = None
+        if d["has_override"]:
+            override = np.array(arrays["override"], np.int64, copy=True)
+        return cls(
+            seed=d["seed"], dp_rank=d["dp_rank"], dp_size=d["dp_size"],
+            epoch=d["epoch"], cursor=d["cursor"],
+            snapshot_id=d["snapshot_id"], n_tasks=d["n_tasks"],
+            buffer=np.array(arrays["buffer"], np.int32, copy=True),
+            override=override,
+        )
+
+    @staticmethod
+    def restore_structs() -> dict:
+        """Restore target for CheckpointManager: the buffer and override
+        arrays are variable-length, so every leaf is the shape-free
+        ``ANY_SHAPE`` placeholder."""
+        from repro.distrib.checkpoint import ANY_SHAPE
+
+        return {"meta": ANY_SHAPE, "buffer": ANY_SHAPE,
+                "override": ANY_SHAPE}

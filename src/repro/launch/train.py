@@ -23,9 +23,10 @@ import jax
 from repro.aformat.expressions import field
 from repro.configs import SHAPES, get_config, smoke_config
 from repro.core import dataset, make_cluster
-from repro.data import (PipelineConfig, TokenPipeline, device_put_batch,
-                        synth_corpus, write_corpus)
+from repro.data import device_put_batch, synth_corpus, write_corpus
+from repro.dataset.qos import TenantRegistry, ingest_context
 from repro.distrib import CheckpointManager
+from repro.ingest import ReaderConfig, ReaderState, ShardedReader
 from repro.launch import knobs as knobs_mod
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.sharding import default_rules
@@ -67,7 +68,10 @@ def main() -> int:
                     help="pushdown quality-filter threshold")
     ap.add_argument("--osds", type=int, default=8)
     ap.add_argument("--format", default="pushdown",
-                    choices=["pushdown", "parquet"])
+                    choices=["pushdown", "parquet", "adaptive"])
+    ap.add_argument("--resume", action="store_true",
+                    help="restore model + reader from the latest "
+                         "checkpoint and continue the exact batch stream")
     args = ap.parse_args()
 
     # -- model + mesh ---------------------------------------------------------
@@ -97,37 +101,68 @@ def main() -> int:
     write_corpus(fs, "/corpus", corpus, num_shards=args.osds,
                  row_group_rows=16384)
     ds = dataset(fs, "/corpus")
-    pcfg = PipelineConfig(seq_len=seq, local_batch=batch,
-                          predicate=field("quality") > args.quality,
-                          format=args.format, num_threads=2)
-    pipe = TokenPipeline(ds, pcfg)
+    # the training reader is a registered bulk-lane tenant: interactive
+    # queries against the same cluster are arbitrated against it by the
+    # shared weighted-fair admission controller, not starved by it
+    registry = TenantRegistry()
+    rcfg = ReaderConfig(seq_len=seq, local_batch=batch,
+                        predicate=field("quality") > args.quality,
+                        format=args.format, num_threads=2,
+                        tenant=ingest_context(registry), registry=registry)
     cm = CheckpointManager(fs, "/ckpt", keep=3)
 
-    # -- train loop ----------------------------------------------------------------
+    # -- train state (+ optional resume) -------------------------------------
     state, state_specs, fn = build_training(cfg, mesh, rules, opt)
+    start_step = 0
+    rstate: ReaderState | None = None
+    if args.resume:
+        last = cm.latest_step()
+        if last is None:
+            print("--resume: no checkpoint found, starting fresh")
+        else:
+            from repro.sharding import tree_shardings
+
+            shardings = tree_shardings(mesh, rules, state, state_specs)
+            state = cm.restore({"model": state}, last,
+                               shardings={"model": shardings})["model"]
+            rstate = ReaderState.from_arrays(
+                cm.restore({"reader": ReaderState.restore_structs()},
+                           last)["reader"])
+            start_step = last
+            print(f"--resume: step {last}, reader at epoch "
+                  f"{rstate.epoch} cursor {rstate.cursor}")
+    reader = ShardedReader.for_mesh(ds, rcfg, mesh, state=rstate)
+
+    # -- train loop ----------------------------------------------------------------
     print(f"arch={cfg.name} params~{cfg.param_count() / 1e6:.1f}M "
-          f"mesh={dict(mesh.shape)} ingest={args.format}")
-    it = iter(pipe)
+          f"mesh={dict(mesh.shape)} ingest={args.format} "
+          f"shard {reader.dp_rank}/{reader.dp_size} "
+          f"({len(reader.shard)} of {len(reader.tasks)} tasks)")
     t0 = time.perf_counter()
-    for step in range(1, args.steps + 1):
-        host_batch = next(it)
+    for step in range(start_step + 1, start_step + args.steps + 1):
+        host_batch = next(reader)
         gbatch = device_put_batch(host_batch, mesh, rules)
         state, mets = fn(state, gbatch)
-        if step % 10 == 0 or step == 1:
+        if step % 10 == 0 or step == start_step + 1:
             loss = float(mets["loss"])
-            toks = step * seq * batch
+            toks = (step - start_step) * seq * batch
             dt = time.perf_counter() - t0
             print(f"step {step:5d} loss {loss:7.4f} "
                   f"tok/s {toks / dt:9.0f} lr {float(mets['lr']):.2e}",
                   flush=True)
         if step % args.ckpt_every == 0:
-            cm.save_async(state, step)
+            # reader state rides in the same checkpoint as the model:
+            # one commit point restores both to the same cut
+            cm.save_async({"model": state,
+                           "reader": reader.checkpoint().to_arrays()},
+                          step)
     cm.wait()
-    ing = pipe.stats()
+    reader.close()
+    ing = reader.stats()
     print(f"done: ingest host_cpu={ing['client_cpu_s']}s "
           f"storage_cpu={ing['osd_cpu_s']}s "
           f"wire={ing['wire_bytes'] / 1e6:.1f}MB "
-          f"checkpoints={cm.steps()}")
+          f"batches={ing['batches']} checkpoints={cm.steps()}")
     return 0
 
 

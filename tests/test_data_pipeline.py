@@ -1,4 +1,6 @@
-"""Training ingest pipeline: packing, filtering, rank-disjointness."""
+"""Training ingest pipeline: packing, filtering, rank-disjointness —
+now exercised through the deprecated TokenPipeline wrapper over
+repro.ingest.ShardedReader."""
 
 import numpy as np
 import pytest
@@ -7,6 +9,9 @@ from repro.aformat.expressions import field
 from repro.core import dataset, make_cluster
 from repro.data import (PipelineConfig, Prefetcher, TokenPipeline,
                         synth_corpus, write_corpus)
+
+# the module under test *is* the deprecated shim
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 
 @pytest.fixture(scope="module")
@@ -86,6 +91,50 @@ def test_epoch_determinism(corpus_fs):
         assert np.array_equal(x, y)
 
 
+def test_deprecation_warning_fires(corpus_fs):
+    fs, _ = corpus_fs
+    ds = dataset(fs, "/c")
+    with pytest.warns(DeprecationWarning, match="ShardedReader"):
+        TokenPipeline(ds, PipelineConfig(seq_len=32, local_batch=2))
+
+
+def test_empty_shard_is_legal(corpus_fs):
+    """dp_size > fragment count used to raise; now the starved ranks
+    yield nothing and the populated ranks still cover every fragment."""
+    fs, _ = corpus_fs
+    ds = dataset(fs, "/c")
+    cfg = PipelineConfig(seq_len=32, local_batch=2)
+    n_frags = len(ds.fragments())
+    dp = n_frags + 3
+    pipes = [TokenPipeline(ds, cfg, dp_rank=r, dp_size=dp)
+             for r in range(dp)]
+    empty = [p for p in pipes if not p.fragments]
+    assert empty, "expected at least one starved rank"
+    for p in empty:
+        assert list(p.batches()) == []
+    covered = {(f.path, f.obj_idx, f.rg_in_object)
+               for p in pipes for f in p.fragments}
+    assert covered == {(f.path, f.obj_idx, f.rg_in_object)
+                       for f in ds.fragments()}
+
+
+def test_wrapper_matches_direct_reader(corpus_fs):
+    """The shim is a veneer: same batches as ShardedReader itself."""
+    from repro.ingest import ReaderConfig, ShardedReader
+
+    fs, _ = corpus_fs
+    ds = dataset(fs, "/c")
+    pipe = TokenPipeline(ds, PipelineConfig(seq_len=32, local_batch=2,
+                                            seed=7))
+    reader = ShardedReader(ds, ReaderConfig(seq_len=32, local_batch=2,
+                                            seed=7))
+    for _, a, b in zip(range(4), pipe.batches(), reader):
+        assert np.array_equal(a["tokens"], b["tokens"])
+        assert np.array_equal(a["labels"], b["labels"])
+    pipe.close()
+    reader.close()
+
+
 def test_prefetcher_propagates_errors():
     def gen():
         yield 1
@@ -112,3 +161,39 @@ def test_prefetcher_overlap():
     elapsed = time.perf_counter() - t0
     assert out == [0, 1, 2, 3]
     assert elapsed < 0.06               # most items were already buffered
+
+
+def test_prefetcher_close_unblocks_producer():
+    """An abandoned iterator must not park its thread on queue.put
+    forever: close() wakes the producer, joins it, and closes the
+    source generator."""
+    import itertools
+
+    closed = []
+
+    def endless():
+        try:
+            for i in itertools.count():
+                yield i
+        finally:
+            closed.append(True)
+
+    p = Prefetcher(endless(), depth=1)
+    assert next(p) == 0                 # producer alive and parked on put
+    p.close()
+    assert not p._thread.is_alive()
+    assert closed == [True]
+    with pytest.raises(StopIteration):  # closed iterator is exhausted
+        next(p)
+    p.close()                           # idempotent
+
+
+def test_prefetcher_context_manager():
+    def gen():
+        while True:
+            yield 1
+
+    with Prefetcher(gen(), depth=1) as p:
+        assert next(p) == 1
+        thread = p._thread
+    assert not thread.is_alive()

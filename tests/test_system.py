@@ -1,9 +1,9 @@
 """End-to-end system test: the paper's storage stack feeding real training.
 
-corpus -> object store (3-way replicated) -> pushdown-filtered ingest ->
-train a tiny model -> checkpoint into the same object store -> kill an OSD
-mid-run -> restore and continue.  This is the full integration path of
-DESIGN.md §3 on one CPU device.
+corpus -> object store (3-way replicated) -> pushdown-filtered sharded
+reader -> train a tiny model -> checkpoint model+reader into the same
+object store -> kill an OSD mid-run -> restore and continue.  This is
+the full integration path of DESIGN.md §3 on one CPU device.
 """
 
 import dataclasses
@@ -15,9 +15,9 @@ import numpy as np
 from repro.aformat.expressions import field
 from repro.configs import smoke_config
 from repro.core import dataset, make_cluster
-from repro.data import PipelineConfig, TokenPipeline, synth_corpus, \
-    write_corpus
+from repro.data import synth_corpus, write_corpus
 from repro.distrib import CheckpointManager
+from repro.ingest import ReaderConfig, ReaderState, ShardedReader
 from repro.launch.mesh import make_local_mesh
 from repro.sharding import default_rules
 from repro.train import optim, step as step_mod
@@ -31,11 +31,11 @@ def test_end_to_end_train_with_pushdown_ingest():
     write_corpus(fs, "/corpus", corpus, num_shards=3, row_group_rows=8192)
     ds = dataset(fs, "/corpus")
 
-    # --- ingest: storage-side quality filtering ----------------------------
-    pcfg = PipelineConfig(seq_len=32, local_batch=4,
-                          predicate=field("quality") > 0.3,
-                          format="pushdown", num_threads=2, seed=1)
-    pipe = TokenPipeline(ds, pcfg)
+    # --- ingest: storage-side quality filtering through the query plan -----
+    rcfg = ReaderConfig(seq_len=32, local_batch=4,
+                        predicate=field("quality") > 0.3,
+                        format="pushdown", num_threads=2, seed=1)
+    pipe = ShardedReader(ds, rcfg)
 
     # --- model + train step -------------------------------------------------
     cfg = smoke_config("starcoder2-7b")
@@ -50,31 +50,37 @@ def test_end_to_end_train_with_pushdown_ingest():
 
     cm = CheckpointManager(fs, "/ckpt", keep=2)
     losses = []
-    it = iter(pipe)
     for step in range(8):
-        batch = next(it)
+        batch = next(pipe)
         state, mets = fn(state, {k: jnp.asarray(v)
                                  for k, v in batch.items()})
         losses.append(float(mets["loss"]))
         if step == 4:
-            cm.save(state, step)
+            # one commit point holds the model and the reader cut
+            cm.save({"model": state,
+                     "reader": pipe.checkpoint().to_arrays()}, step)
 
     assert all(np.isfinite(losses))
     # ingest really ran on the storage nodes
     st = pipe.stats()
     assert st["osd_cpu_s"] > 0 and st["client_cpu_s"] < st["osd_cpu_s"] * 5
+    pipe.close()
 
     # --- failure + restore ----------------------------------------------------
     fs.store.fail_osd(0)
     structs = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                            state)
-    restored = cm.restore(structs, 4)
-    assert int(np.asarray(restored["step"])) == 5
-    # training continues from the restored state through the degraded store
-    batch = next(it)
-    state2, mets = fn(restored, {k: jnp.asarray(v)
-                                 for k, v in batch.items()})
+    restored = cm.restore({"model": structs,
+                           "reader": ReaderState.restore_structs()}, 4)
+    assert int(np.asarray(restored["model"]["step"])) == 5
+    rstate = ReaderState.from_arrays(restored["reader"])
+    # the restored reader continues the stream through the degraded store
+    pipe2 = ShardedReader(ds, rcfg, state=rstate)
+    batch = next(pipe2)
+    state2, mets = fn(restored["model"], {k: jnp.asarray(v)
+                                          for k, v in batch.items()})
     assert np.isfinite(float(mets["loss"]))
+    pipe2.close()
 
 
 def test_scan_consistency_under_failure_and_hedging():
