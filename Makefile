@@ -4,7 +4,8 @@ PYTHON ?= python
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-fast test-cov lint bench bench-adaptive bench-aggregate \
-	bench-compact bench-decode bench-fig5 bench-fig6 bench-hedged \
+	bench-compact bench-decode bench-encoding bench-fig5 bench-fig6 \
+	bench-hedged \
 	bench-ingest bench-join bench-limit bench-qos bench-smoke deps
 
 test:
@@ -42,7 +43,7 @@ bench-smoke:
 
 bench: bench-fig5 bench-fig6 bench-adaptive bench-hedged bench-aggregate \
 	bench-limit bench-compact bench-join bench-decode bench-qos \
-	bench-ingest
+	bench-ingest bench-encoding
 
 # multi-tenant QoS: interactive p99 under a hostile bulk fleet, with and
 # without the shared weighted-fair admission plane
@@ -64,6 +65,9 @@ bench-aggregate:
 
 bench-compact:
 	$(PYTHON) benchmarks/compaction.py
+
+bench-encoding:
+	$(PYTHON) benchmarks/encoding_advisor.py
 
 bench-join:
 	$(PYTHON) benchmarks/semi_join.py

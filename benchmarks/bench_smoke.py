@@ -139,6 +139,20 @@ def run_ingest_train_small() -> dict:
     return out
 
 
+def run_encoding_advisor_small() -> dict:
+    from benchmarks import encoding_advisor
+    # small config: fewer rows/lookups; both arms, all five claims run
+    encoding_advisor.ROWS = 16_000
+    encoding_advisor.LOOKUPS = 4
+    encoding_advisor.COMPACT_ROWS = 8_000
+    t0 = time.perf_counter()
+    out = encoding_advisor.run()
+    out["wall_s"] = time.perf_counter() - t0
+    out["claims"] = encoding_advisor.check_claims(out)
+    out["small_config"] = True
+    return out
+
+
 def run_kernels() -> dict:
     from benchmarks import kernel_bench
     t0 = time.perf_counter()
@@ -164,6 +178,7 @@ BENCHES = {
     "decode_backend": run_decode_backend_small,
     "multi_tenant": run_multi_tenant_small,
     "ingest_train": run_ingest_train_small,
+    "encoding_advisor": run_encoding_advisor_small,
     "kernels": run_kernels,
 }
 

@@ -12,9 +12,9 @@ import sys
 import time
 
 from benchmarks import (adaptive_scan, compaction, decode_backend,
-                        fig5_latency_scaling, fig6_cpu_utilization,
-                        ingest_train, kernel_bench, layout_compare,
-                        multi_tenant, semi_join)
+                        encoding_advisor, fig5_latency_scaling,
+                        fig6_cpu_utilization, ingest_train, kernel_bench,
+                        layout_compare, multi_tenant, semi_join)
 
 BENCHES = {
     "fig5": fig5_latency_scaling.main,
@@ -27,6 +27,7 @@ BENCHES = {
     "compaction": compaction.main,
     "semi_join": semi_join.main,
     "multi_tenant": multi_tenant.main,
+    "encoding_advisor": encoding_advisor.main,
 }
 
 

@@ -11,7 +11,8 @@ comes out.  Two backends implement that contract:
     ``scan_op`` still runs it (OSDs have no accelerator).
 
 ``PallasBackend``
-    The accelerator path (``repro.kernels``): DICT columns batch through
+    The accelerator path (``repro.kernels``): DICT (and, after a host
+    width-bit unpack of the index buffer, DICTP) columns batch through
     the ``decode_dictionary`` gather kernel, supported predicates lower
     via ``build_program``/``fused_predicate`` so mask evaluation fuses
     across columns in one pass, and selections compact through
@@ -59,11 +60,13 @@ def n_data_buffers(field_type: str, encoding: str) -> int:
     """How many of a chunk's buffers hold data (the rest is validity)."""
     if encoding == encodings.PLAIN:
         return 2 if field_type == "string" else 1
-    if encoding == encodings.DICT:
+    if encoding in (encodings.DICT, encodings.DICTP):
         return 3 if field_type == "string" else 2
     if encoding in (encodings.DELTA, encodings.RLE):
         return 2
-    return 1  # bitpack
+    # bitpack: bool is a single bit buffer; integers carry a
+    # <base, width> header buffer plus the packed bits
+    return 1 if field_type == "bool" else 2
 
 
 @dataclasses.dataclass
@@ -249,12 +252,19 @@ class PallasBackend(DecodeBackend):
     def decode_column(self, chunk: ChunkData) -> Column:
         route = "host"
         values = None
-        if (chunk.encoding == encodings.DICT
+        if (chunk.encoding in (encodings.DICT, encodings.DICTP)
                 and chunk.field.type in ("int32", "int64", "float32")):
             from repro.kernels import decode_dictionary
 
-            codes = np.frombuffer(chunk.data_bufs[0],
-                                  np.int32)[:chunk.num_rows]
+            if chunk.encoding == encodings.DICT:
+                codes = np.frombuffer(chunk.data_bufs[0],
+                                      np.int32)[:chunk.num_rows]
+            else:
+                # DICTP: width-bit unpack is a byte-stream transform
+                # (host), the gather itself still runs on the kernel
+                buf = chunk.data_bufs[0]
+                codes = encodings.unpack_width(
+                    buf[1:], chunk.num_rows, buf[0]).astype(np.int32)
             dic = np.frombuffer(chunk.data_bufs[1],
                                 chunk.field.numpy_dtype)
             try:
@@ -363,7 +373,7 @@ class PallasBackend(DecodeBackend):
         for n in sorted(needed, key=meta.schema.index):
             field = meta.schema.field(n)
             chunk = rg.chunks[meta.schema.index(n)]
-            ok = (chunk.encoding == encodings.DICT
+            ok = (chunk.encoding in (encodings.DICT, encodings.DICTP)
                   and field.type in ("int32", "int64", "float32"))
             if ok and field.type != "float32":
                 st = chunk.stats

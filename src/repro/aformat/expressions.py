@@ -93,40 +93,47 @@ class Cmp(Expr):
 
     def prune(self, stats):
         st = stats.get(self.column)
-        if st is None or st.min is None:
+        if st is None:
             return SOME
-        lo, hi, v = st.min, st.max, self.value
-        full = st.null_count == 0
+        if st.min is not None:
+            lo, hi, v = st.min, st.max, self.value
+            full = st.null_count == 0
+            if self.op == "==":
+                if v < lo or v > hi:
+                    return NONE
+                if lo == hi == v and full:
+                    return ALL
+            elif self.op == "!=":
+                if lo == hi == v:
+                    return NONE
+                if (v < lo or v > hi) and full:
+                    return ALL
+            elif self.op == "<":
+                if lo >= v:
+                    return NONE
+                if hi < v and full:
+                    return ALL
+            elif self.op == "<=":
+                if lo > v:
+                    return NONE
+                if hi <= v and full:
+                    return ALL
+            elif self.op == ">":
+                if hi <= v:
+                    return NONE
+                if lo > v and full:
+                    return ALL
+            elif self.op == ">=":
+                if hi < v:
+                    return NONE
+                if lo >= v and full:
+                    return ALL
         if self.op == "==":
-            if v < lo or v > hi:
+            # bloom-index probe: upgrade the stats MAYBE to a provable
+            # NONE (False = definitely absent; True/None stay SOME)
+            idx = getattr(st, "index", None)
+            if idx is not None and idx.contains_any([self.value]) is False:
                 return NONE
-            if lo == hi == v and full:
-                return ALL
-        elif self.op == "!=":
-            if lo == hi == v:
-                return NONE
-            if (v < lo or v > hi) and full:
-                return ALL
-        elif self.op == "<":
-            if lo >= v:
-                return NONE
-            if hi < v and full:
-                return ALL
-        elif self.op == "<=":
-            if lo > v:
-                return NONE
-            if hi <= v and full:
-                return ALL
-        elif self.op == ">":
-            if hi <= v:
-                return NONE
-            if lo > v and full:
-                return ALL
-        elif self.op == ">=":
-            if hi < v:
-                return NONE
-            if lo >= v and full:
-                return ALL
         return SOME
 
     def columns(self):
@@ -157,9 +164,14 @@ class IsIn(Expr):
 
     def prune(self, stats):
         st = stats.get(self.column)
-        if st is None or st.min is None:
+        if st is None:
             return SOME
-        if all(v < st.min or v > st.max for v in self.values):
+        if st.min is not None and all(
+                v < st.min or v > st.max for v in self.values):
+            return NONE
+        idx = getattr(st, "index", None)
+        if (idx is not None and self.values
+                and idx.contains_any(self.values) is False):
             return NONE
         return SOME
 
@@ -220,6 +232,16 @@ class BloomIn(Expr):
     count: int                    # keys inserted (explain/selectivity)
     lo: Any = None                # min/max of the inserted keys (numeric
     hi: Any = None                # keys only; None disables range pruning)
+    #: In-memory only (never serialized — the wire form is unchanged):
+    #: the build keys' canonical hash words and their key domain, kept by
+    #: ``build`` for small key sets so ``prune`` can probe a row group's
+    #: ColumnIndex bloom before the fragment ships.
+    key_kind: "str | None" = dataclasses.field(default=None, compare=False)
+    words: Any = dataclasses.field(default=None, compare=False, repr=False)
+
+    #: Probe-side key retention cap: past this, per-row-group bloom
+    #: probes cost more than they prune and ``prune`` stays stats-only.
+    MAX_PROBE_KEYS = 4096
 
     @staticmethod
     def build(column: str, values, *, bits_per_key: int = 10) -> "BloomIn":
@@ -241,8 +263,13 @@ class BloomIn(Expr):
         lo = hi = None
         if arr.dtype.kind in ("i", "u", "f") and len(arr):
             lo, hi = arr.min().item(), arr.max().item()
-        return BloomIn(column, bitarr.tobytes(), num_bits, num_hashes,
-                       len(arr), lo, hi)
+        bl = BloomIn(column, bitarr.tobytes(), num_bits, num_hashes,
+                     len(arr), lo, hi)
+        bl.key_kind = ("i" if arr.dtype.kind in ("i", "u", "b")
+                       else "f" if arr.dtype.kind == "f" else "s")
+        if len(arr) <= BloomIn.MAX_PROBE_KEYS:
+            bl.words = np.unique(words)
+        return bl
 
     def _test(self, values: np.ndarray) -> np.ndarray:
         bitarr = np.frombuffer(self.bits, np.uint8)
@@ -267,10 +294,18 @@ class BloomIn(Expr):
 
     def prune(self, stats):
         st = stats.get(self.column)
-        if (st is None or st.min is None
-                or self.lo is None or self.hi is None):
+        if st is None:
             return SOME
-        if st.max < self.lo or st.min > self.hi:
+        if (st.min is not None and self.lo is not None
+                and self.hi is not None
+                and (st.max < self.lo or st.min > self.hi)):
+            return NONE
+        # probe the row group's own bloom with the build keys' words:
+        # both sides hash through _key_words, so domains must match
+        idx = getattr(st, "index", None)
+        if (idx is not None and self.words is not None
+                and len(self.words) and self.key_kind == idx.kind
+                and not idx.contains_any_words(self.words)):
             return NONE
         return SOME               # never ALL: the filter is approximate
 

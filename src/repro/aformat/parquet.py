@@ -24,7 +24,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.aformat import compression, encodings
+from repro.aformat import compression, encodings, indexes
 from repro.aformat import decode as decode_mod
 from repro.aformat.schema import Schema
 from repro.aformat.statistics import ColumnStats, compute_stats
@@ -40,16 +40,24 @@ class ChunkMeta:
     encoding: str
     codec: str
     stats: ColumnStats
+    #: Versioned physical-design index block (bloom + distinct count);
+    #: None on footers written before index blocks existed, and on
+    #: blocks whose version this reader does not understand.
+    index: "indexes.ColumnIndex | None" = None
 
-    def to_json(self):
-        return {"offset": self.offset, "buffer_lengths": self.buffer_lengths,
-                "encoding": self.encoding, "codec": self.codec,
-                "stats": self.stats.to_json()}
+    def to_json(self, *, include_indexes: bool = True):
+        d = {"offset": self.offset, "buffer_lengths": self.buffer_lengths,
+             "encoding": self.encoding, "codec": self.codec,
+             "stats": self.stats.to_json()}
+        if include_indexes and self.index is not None:
+            d["index"] = self.index.to_json()
+        return d
 
     @staticmethod
     def from_json(d):
         return ChunkMeta(d["offset"], d["buffer_lengths"], d["encoding"],
-                         d["codec"], ColumnStats.from_json(d["stats"]))
+                         d["codec"], ColumnStats.from_json(d["stats"]),
+                         indexes.ColumnIndex.from_json(d.get("index")))
 
 
 @dataclasses.dataclass
@@ -59,10 +67,11 @@ class RowGroupMeta:
     total_bytes: int
     chunks: list[ChunkMeta]     # one per schema field, in order
 
-    def to_json(self):
+    def to_json(self, *, include_indexes: bool = True):
         return {"num_rows": self.num_rows, "offset": self.offset,
                 "total_bytes": self.total_bytes,
-                "chunks": [c.to_json() for c in self.chunks]}
+                "chunks": [c.to_json(include_indexes=include_indexes)
+                           for c in self.chunks]}
 
     @staticmethod
     def from_json(d):
@@ -70,7 +79,16 @@ class RowGroupMeta:
                             [ChunkMeta.from_json(c) for c in d["chunks"]])
 
     def column_stats(self, schema: Schema) -> dict[str, ColumnStats]:
-        return {f.name: c.stats for f, c in zip(schema, self.chunks)}
+        """Per-column stats with the chunk's index block (if any) riding
+        along — every pruning choke point receives this mapping, so a
+        footer that carries indexes makes ``Expr.prune`` index-aware
+        with no signature change anywhere."""
+        out = {}
+        for f, c in zip(schema, self.chunks):
+            if c.stats.index is not c.index:
+                c.stats.index = c.index
+            out[f.name] = c.stats
+        return out
 
 
 @dataclasses.dataclass
@@ -80,9 +98,10 @@ class FileMeta:
     num_rows: int
     created_by: str = "repro-arw1"
 
-    def to_json(self):
+    def to_json(self, *, include_indexes: bool = True):
         return {"schema": self.schema.to_json(),
-                "row_groups": [r.to_json() for r in self.row_groups],
+                "row_groups": [r.to_json(include_indexes=include_indexes)
+                               for r in self.row_groups],
                 "num_rows": self.num_rows, "created_by": self.created_by}
 
     @staticmethod
@@ -91,8 +110,12 @@ class FileMeta:
                         [RowGroupMeta.from_json(r) for r in d["row_groups"]],
                         d["num_rows"], d.get("created_by", "?"))
 
-    def serialize(self) -> bytes:
-        return json.dumps(self.to_json()).encode()
+    def serialize(self, *, include_indexes: bool = True) -> bytes:
+        """``include_indexes=False`` strips the (possibly kilobytes-long)
+        bloom blocks — the wire form for request payloads and metadata
+        replies, where min/max stats are all the receiver prunes with."""
+        return json.dumps(
+            self.to_json(include_indexes=include_indexes)).encode()
 
     @staticmethod
     def deserialize(b: bytes) -> "FileMeta":
@@ -104,22 +127,37 @@ class FileMeta:
 # ---------------------------------------------------------------------------
 
 
-def encode_row_group(part: Table, codec: str) -> tuple[bytes, RowGroupMeta]:
-    """Encode one row group; ChunkMeta offsets are relative to the group."""
+def encode_row_group(part: Table, codec: str, *, build_indexes: bool = True,
+                     advise: bool = False) -> tuple[bytes, RowGroupMeta]:
+    """Encode one row group; ChunkMeta offsets are relative to the group.
+
+    ``build_indexes`` attaches a per-column bloom/distinct index block to
+    each chunk's footer entry.  ``advise=True`` swaps the one-shot
+    ``choose_encoding`` heuristic for the measured advisor (encode every
+    candidate, keep the cheapest — the compaction write path)."""
     out = bytearray()
     chunks = []
     for col in part.columns:
-        enc = encodings.choose_encoding(col.field.type, col.values)
-        try:
-            bufs = encodings.encode(col.field.type, enc, col.values)
-        except ValueError:   # e.g. DELTA overflow discovered on full data
-            enc = encodings.PLAIN
-            bufs = encodings.encode(col.field.type, enc, col.values)
+        if advise:
+            from repro.aformat import advisor as advisor_mod
+
+            advice = advisor_mod.advise_column(
+                col.field.type, col.values, codec)
+            enc, bufs = advice.encoding, list(advice.buffers)
+        else:
+            enc = encodings.choose_encoding(col.field.type, col.values)
+            try:
+                bufs = encodings.encode(col.field.type, enc, col.values)
+            except ValueError:  # e.g. DELTA overflow found on full data
+                enc = encodings.PLAIN
+                bufs = encodings.encode(col.field.type, enc, col.values)
         if col.validity is not None:
             bufs.append(np.packbits(col.validity).tobytes())
         comp = [compression.compress(codec, b) for b in bufs]
         meta = ChunkMeta(len(out), [len(b) for b in comp], enc, codec,
-                         compute_stats(col))
+                         compute_stats(col),
+                         indexes.ColumnIndex.build(col)
+                         if build_indexes else None)
         for b in comp:
             out.extend(b)
         chunks.append(meta)
@@ -129,7 +167,7 @@ def encode_row_group(part: Table, codec: str) -> tuple[bytes, RowGroupMeta]:
 def _shift_group(rg: RowGroupMeta, offset: int) -> RowGroupMeta:
     return RowGroupMeta(rg.num_rows, offset, rg.total_bytes, [
         ChunkMeta(c.offset + offset, c.buffer_lengths, c.encoding, c.codec,
-                  c.stats) for c in rg.chunks])
+                  c.stats, c.index) for c in rg.chunks])
 
 
 def iter_row_groups(table: Table, row_group_rows: int):
@@ -143,14 +181,19 @@ def iter_row_groups(table: Table, row_group_rows: int):
 
 def write_table(table: Table, *, row_group_rows: int = 65536,
                 codec: str = compression.ZLIB,
-                pad_row_groups_to: int = 0) -> bytes:
+                pad_row_groups_to: int = 0,
+                build_indexes: bool = True, advise: bool = False) -> bytes:
     """Serialize a table.  ``pad_row_groups_to`` pads every row group to a
     multiple of that many bytes — the Striped layout's equal-size row-group
-    rewrite (paper Fig. 3)."""
+    rewrite (paper Fig. 3).  ``build_indexes``/``advise`` are the
+    physical-design knobs (bloom index blocks; measured encoding
+    selection — see ``repro.aformat.advisor``)."""
     out = bytearray(MAGIC)
     groups: list[RowGroupMeta] = []
     for part in iter_row_groups(table, row_group_rows):
-        data, rg = encode_row_group(part, codec)
+        data, rg = encode_row_group(part, codec,
+                                    build_indexes=build_indexes,
+                                    advise=advise)
         g_off = len(out)
         out.extend(data)
         total = rg.total_bytes

@@ -14,6 +14,12 @@ class ColumnStats:
     max: Any = None
     null_count: int = 0
     count: int = 0
+    #: Optional physical-design index block for the same chunk
+    #: (``repro.aformat.indexes.ColumnIndex``): attached by
+    #: ``RowGroupMeta.column_stats`` so ``Expr.prune`` can upgrade a
+    #: stats-SOME verdict to an index-proven NONE.  Never serialized
+    #: here — the chunk footer entry owns the block.
+    index: Any = dataclasses.field(default=None, compare=False, repr=False)
 
     def to_json(self):
         def py(v):

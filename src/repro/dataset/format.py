@@ -332,7 +332,9 @@ def scan_payload(frag: Fragment, columns, predicate,
     if limit is not None:
         payload["limit"] = int(limit)
     if frag.footer is not None:
-        payload["footer"] = frag.footer.serialize()
+        # wire form: bloom index blocks stripped — the OSD prunes with
+        # min/max stats (and its own object footer, which keeps them)
+        payload["footer"] = frag.footer.serialize(include_indexes=False)
     return payload
 
 
@@ -350,7 +352,9 @@ def agg_payload(frag: Fragment, specs: Sequence[AggSpec],
         "max_groups": max_groups,
     }
     if frag.footer is not None:
-        payload["footer"] = frag.footer.serialize()
+        # wire form: bloom index blocks stripped — the OSD prunes with
+        # min/max stats (and its own object footer, which keeps them)
+        payload["footer"] = frag.footer.serialize(include_indexes=False)
     return payload
 
 
@@ -448,7 +452,8 @@ class PushdownParquetFormat(FileFormat):
             "row_groups": [frag.rg_in_object],
         }
         if frag.footer is not None:
-            payload["footer"] = frag.footer.serialize()
+            payload["footer"] = frag.footer.serialize(
+                include_indexes=False)
         with _admit_fragment(fs, frag, ctx):
             if self.hedge_threshold_s is not None:
                 raw, osd_id, el, hedged = doa.call_hedged(

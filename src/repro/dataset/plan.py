@@ -342,6 +342,17 @@ class FragmentDecision:
     detail: str = ""
 
 
+def _stats_only(stats):
+    """The same per-column stats with index blocks detached — used to
+    attribute a NONE verdict to min/max stats vs the bloom index."""
+    return {
+        k: dataclasses.replace(st, index=None)
+        if getattr(st, "index", None) is not None
+        else st
+        for k, st in stats.items()
+    }
+
+
 def prune_fragments(
     fragments: Sequence[Fragment], predicate: Expr | None
 ) -> tuple[list[tuple[Fragment, Expr | None]], list[FragmentDecision]]:
@@ -377,9 +388,14 @@ def prune_fragments(
         if pred is not None and frag.stats:
             verdict = pred.prune(frag.stats)
             if verdict == NONE:
-                decisions.append(
-                    FragmentDecision(frag, "pruned", "stats prove NONE")
-                )
+                # attribute the NONE: re-prune with the index blocks
+                # detached — only when min/max alone could NOT prove it
+                # did the bloom index earn the skip (cheap: pruned
+                # fragments only)
+                detail = "stats prove NONE"
+                if pred.prune(_stats_only(frag.stats)) != NONE:
+                    detail = "bloom index proves NONE"
+                decisions.append(FragmentDecision(frag, "pruned", detail))
                 continue
             if verdict == ALL:
                 pred = None
@@ -506,6 +522,9 @@ class PhysicalPlan:
     metadata_answers: int = 0
     fragments_total: int = 0
     fragments_pruned: int = 0
+    #: Of the pruned fragments, how many only the bloom index refuted
+    #: (min/max stats alone returned SOME).
+    fragments_index_pruned: int = 0
 
 
 def partition_tasks(
@@ -570,9 +589,13 @@ def lower(root: PlanNode) -> PhysicalPlan:
         for (f, p) in survivors
         if p is None and spec.predicate is not None
     )
+    n_index = sum(
+        1 for d in prune_dec if d.detail == "bloom index proves NONE"
+    )
     passes.append(
         f"stats-pruning: {len(prune_dec)} of {len(fragments)} fragments "
-        f"pruned, {n_all} predicate-free after ALL verdicts"
+        f"pruned ({n_index} by bloom index), {n_all} predicate-free "
+        "after ALL verdicts"
     )
 
     decisions = list(prune_dec)
@@ -646,6 +669,7 @@ def lower(root: PlanNode) -> PhysicalPlan:
         metadata_answers=meta_answers,
         fragments_total=len(fragments),
         fragments_pruned=len(prune_dec),
+        fragments_index_pruned=n_index,
     )
 
 
@@ -667,6 +691,7 @@ class ScanMetrics:
     tasks: list[TaskRecord] = dataclasses.field(default_factory=list)
     fragments_total: int = 0
     fragments_pruned: int = 0
+    fragments_index_pruned: int = 0  # pruned by bloom index, not min/max
     metadata_answers: int = 0  # fragments answered from footer stats
     discovery_bytes: int = 0
     rows: int = 0
@@ -706,6 +731,7 @@ class ScanMetrics:
             "lane": self.lane,
             "fragments": self.fragments_total,
             "pruned": self.fragments_pruned,
+            "index_pruned": self.fragments_index_pruned,
             "metadata_answers": self.metadata_answers,
             "rows": self.rows,
             "wire_bytes": self.wire_bytes,
@@ -1396,6 +1422,7 @@ class Query:
             discovery_bytes=self.ds.discovery_bytes,
             fragments_total=plan.fragments_total,
             fragments_pruned=plan.fragments_pruned,
+            fragments_index_pruned=plan.fragments_index_pruned,
             metadata_answers=plan.metadata_answers,
             tenant=self.ctx.tenant,
             lane=self.ctx.lane,
@@ -1683,9 +1710,14 @@ class Query:
             f"max_inflight={self.num_threads}, "
             f"queue_depth={self.queue_depth}/OSD{budget}{qos}"
         )
+        idx = (
+            f" ({plan.fragments_index_pruned} by bloom index)"
+            if plan.fragments_index_pruned
+            else ""
+        )
         lines.append(
             f"fragments: {plan.fragments_total} total, "
-            f"{plan.fragments_pruned} pruned, "
+            f"{plan.fragments_pruned} pruned{idx}, "
             f"{plan.metadata_answers} metadata-answered, "
             f"{len(plan.tasks)} tasks"
         )
@@ -1763,6 +1795,17 @@ class Query:
         lines.append("== optimizer ==")
         lines += [f"- {p}" for p in plan.passes]
         lines += self._physical_lines(plan, max_fragments)
+        pruned = [d for d in plan.decisions if d.action == "pruned"]
+        shown = 0
+        for d in pruned:
+            if shown >= max_fragments:
+                lines.append(f"  ... (+{len(pruned) - shown} more pruned)")
+                break
+            lines.append(
+                f"  [-] pruned {d.fragment.path}#{d.fragment.obj_idx} "
+                f"({d.detail})"
+            )
+            shown += 1
         return "\n".join(lines)
 
 

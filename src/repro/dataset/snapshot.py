@@ -221,6 +221,12 @@ class CompactionReport:
     fallback_wire_bytes: int = 0  # raw bytes a client-side rewrite moved
     rewritten_bytes: int = 0  # new objects' bytes (cluster-internal)
     tombstones_dropped: int = 0
+    #: Physical-design accounting: source vs rewritten row-group data
+    #: bytes, and the encoding the (advisor-driven) rewrite chose per
+    #: column — how much the re-encode actually saved.
+    bytes_before: int = 0
+    bytes_after: int = 0
+    encodings: dict = dataclasses.field(default_factory=dict)
 
     @property
     def wire_bytes(self) -> int:
@@ -473,8 +479,16 @@ class MutableDataset:
         codec: str = compression.ZLIB,
         client_fallback: bool = True,
         tenant=None,
+        advisor: bool = True,
     ) -> CompactionReport:
         """Merge small row groups into right-sized ones, storage-side.
+
+        ``advisor=True`` (the default) makes the rewrite the measured
+        encoding advisor's customer: each column re-encodes into the
+        cheapest candidate ``repro.aformat.advisor`` finds, and the
+        report carries ``bytes_before``/``bytes_after``/``encodings``
+        so the savings are observable.  ``advisor=False`` keeps the
+        one-shot ``choose_encoding`` heuristic.
 
         Victims come from the row-group size histogram: files whose mean
         row group is under ``min_fill * target_rows`` rows, plus any
@@ -519,7 +533,7 @@ class MutableDataset:
             report.groups += 1
             ok, df = self._compact_group(
                 head, osd_id, group, target_rows, codec, client_fallback,
-                report, ctx,
+                report, ctx, advisor,
             )
             if not ok:
                 continue  # co-location race, no fallback: victims stay
@@ -628,6 +642,7 @@ class MutableDataset:
         client_fallback: bool,
         report: CompactionReport,
         ctx: TaskContext,
+        advisor: bool = True,
     ) -> tuple[bool, DataFile | None]:
         """Rewrite one co-located victim group.  Returns (ok, file):
         ``(True, DataFile)`` on a successful rewrite, ``(True, None)``
@@ -652,6 +667,7 @@ class MutableDataset:
             "target": target,
             "row_group_rows": target_rows,
             "codec": codec,
+            "advise": advisor,
         }
         report.request_bytes += len(json.dumps(payload).encode())
         gate = (ctx.admission.admit(osd_id, ctx)
@@ -668,8 +684,11 @@ class MutableDataset:
             if not client_fallback:
                 return False, None
             return True, self._compact_client(
-                head, group, path, target_rows, codec, report
+                head, group, path, target_rows, codec, report, advisor
             )
+        report.bytes_before += reply.get("bytes_before", 0)
+        for col, enc in reply.get("encodings", {}).items():
+            report.encodings[col] = enc
         if reply["rows"] == 0:
             return True, None
         size = reply["size"]
@@ -680,6 +699,9 @@ class MutableDataset:
         )
         report.rewritten_bytes += size
         footer = parquet.FileMeta.from_json(reply["footer"])
+        report.bytes_after += sum(
+            rg.total_bytes for rg in footer.row_groups
+        )
         return True, DataFile(path, reply["rows"], 0, su, footer)
 
     def _compact_client(
@@ -690,6 +712,7 @@ class MutableDataset:
         target_rows: int,
         codec: str,
         report: CompactionReport,
+        advisor: bool = True,
     ) -> DataFile | None:
         """Client-side rewrite fallback: the same merge, but the raw
         bytes round-trip through the client (read data + write new
@@ -704,6 +727,7 @@ class MutableDataset:
             tomb = head.tombstone_for(f)
             keep = Not(tomb) if tomb is not None else None
             for rg in f.footer.row_groups:
+                report.bytes_before += rg.total_bytes
                 parts.append(
                     parquet.scan_row_group(src, f.footer, rg, None, keep)
                 )
@@ -711,8 +735,14 @@ class MutableDataset:
         if merged is None or len(merged) == 0:
             return None
         meta = write_flat(
-            self.fs, path, merged, row_group_rows=target_rows, codec=codec
+            self.fs, path, merged, row_group_rows=target_rows,
+            codec=codec, advise=advisor,
         )
+        report.bytes_after += sum(
+            rg.total_bytes for rg in meta.row_groups
+        )
+        for f_, c in zip(meta.schema, meta.row_groups[0].chunks):
+            report.encodings[f_.name] = c.encoding
         ino = self.fs.stat(path)
         report.fallback_wire_bytes += ino.size
         report.rewritten_bytes += ino.size

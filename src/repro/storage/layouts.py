@@ -78,7 +78,8 @@ def write_striped(fs: CephFS, path: str, table: Table, *,
     out.extend(struct.pack("<I", len(footer)))
     out.extend(parquet.MAGIC)
     rg_objects = list(range(len(parts)))
-    footer_objects = sorted({footer_start // su, (len(out) - 1) // su})
+    footer_objects = list(range(footer_start // su,
+                                (len(out) - 1) // su + 1))
     meta = StripedFile(path, su, len(parts), rg_objects, footer_objects)
     fs.write_file(path, bytes(out), stripe_unit=su, xattrs={
         "layout": "striped",
@@ -93,17 +94,20 @@ def read_striped_footer(fs: CephFS, path: str) -> parquet.FileMeta:
     """Read the footer from the *last object(s)* only, via striping
     metadata — no full-file read (paper: 'the last object ... is read')."""
     ino = fs.stat(path)
-    last = fs.store.get(fs.object_name(ino, ino.object_count - 1))
+    next_obj = ino.object_count - 1
+    last = fs.store.get(fs.object_name(ino, next_obj))
+    next_obj -= 1
     if len(last) < 8:
-        prev = fs.store.get(fs.object_name(ino, ino.object_count - 2))
-        last = prev + last
+        last = fs.store.get(fs.object_name(ino, next_obj)) + last
+        next_obj -= 1
     if last[-4:] != parquet.MAGIC:
         raise ValueError("bad striped footer magic")
     (flen,) = struct.unpack("<I", last[-8:-4])
-    if flen + 8 > len(last):   # footer spills across objects
-        start_obj = ino.object_count - 2
-        more = fs.store.get(fs.object_name(ino, start_obj))
-        last = more + last
+    while flen + 8 > len(last) and next_obj >= 0:
+        # footer spills across objects (index blocks make big footers):
+        # keep prepending earlier objects until the length is covered
+        last = fs.store.get(fs.object_name(ino, next_obj)) + last
+        next_obj -= 1
     return parquet.FileMeta.deserialize(last[-8 - flen:-8])
 
 
@@ -201,12 +205,18 @@ def read_split_index(fs: CephFS, index_path: str) -> SplitIndex:
 
 def write_flat(fs: CephFS, path: str, table: Table, *,
                row_group_rows: int = 65536,
-               codec: str = compression.ZLIB) -> parquet.FileMeta:
+               codec: str = compression.ZLIB,
+               build_indexes: bool = True,
+               advise: bool = False) -> parquet.FileMeta:
     """Write ``table`` as one self-contained single-object ARW1 file.
     Returns the file's footer (the mutable-dataset append path embeds it
-    in the manifest so discovery never re-reads the file)."""
+    in the manifest so discovery never re-reads the file).
+    ``build_indexes``/``advise`` pass through to
+    :func:`parquet.write_table` (bloom index blocks; measured encoding
+    selection)."""
     data = parquet.write_table(table, row_group_rows=row_group_rows,
-                               codec=codec)
+                               codec=codec, build_indexes=build_indexes,
+                               advise=advise)
     su = max(ALIGN, -(-len(data) // ALIGN) * ALIGN)
     fs.write_file(path, data, stripe_unit=su, xattrs={"layout": "flat"})
     return parquet.read_footer(parquet.BytesSource(data))

@@ -200,7 +200,10 @@ def compact_op(store: ObjectStore, obj: ObjectHandle,
     payload: {"sources": [{"name": object-name, "keep": expr-json|None},
                           ...],
               "target": object name for the rewritten ARW1 file,
-              "row_group_rows": int, "codec": str}
+              "row_group_rows": int, "codec": str,
+              "advise": bool — re-encode each column into the measured
+              encoding advisor's pick (repro.aformat.advisor) instead of
+              the one-shot heuristic}
 
     Every source must be a self-contained ARW1 object held by THIS OSD
     (co-located; the driver groups victims by holder).  The node decodes
@@ -211,10 +214,14 @@ def compact_op(store: ObjectStore, obj: ObjectHandle,
     (``store.put``: an OSD-to-OSD transfer, not a client round-trip).
 
     Only metadata returns to the client: ``{"ok": true, "rows": n,
-    "size": bytes, "footer": FileMeta json}``.  The raw row-group bytes
-    never cross the client wire in either direction.  A source this OSD
-    does not hold returns ``{"ok": false, "missing": [...]}`` — the
-    driver re-plans or falls back to a client-side rewrite.
+    "size": bytes, "bytes_before": source row-group bytes,
+    "encodings": {column: encoding chosen for the rewrite},
+    "footer": FileMeta json}``.  The raw row-group bytes never cross the
+    client wire in either direction (the reply footer is serialized
+    *without* index blocks — the new object's own footer keeps them for
+    storage-side pruning).  A source this OSD does not hold returns
+    ``{"ok": false, "missing": [...]}`` — the driver re-plans or falls
+    back to a client-side rewrite.
 
     Source bytes are read via :meth:`ObjectHandle.peek_all` (cluster-
     internal traffic, like scrub/recovery): compaction must not inflate
@@ -226,25 +233,34 @@ def compact_op(store: ObjectStore, obj: ObjectHandle,
     if missing:
         return json.dumps({"ok": False, "missing": missing}).encode()
     parts = []
+    bytes_before = 0
     for s in sources:
         handle = obj if s["name"] == obj.name else obj.open_peer(s["name"])
         src = parquet.BytesSource(handle.peek_all())
         meta = parquet.read_footer(src)
         keep = Expr.from_json(s.get("keep"))
         for rg in meta.row_groups:
+            bytes_before += rg.total_bytes
             parts.append(parquet.scan_row_group(src, meta, rg, None, keep))
     merged = Table.concat(parts) if parts else None
     rows = len(merged) if merged is not None else 0
     if rows == 0:          # everything tombstoned: nothing to rewrite
         return json.dumps({"ok": True, "rows": 0, "size": 0,
-                           "footer": None}).encode()
+                           "bytes_before": bytes_before,
+                           "encodings": {}, "footer": None}).encode()
     data = parquet.write_table(merged,
                                row_group_rows=payload["row_group_rows"],
-                               codec=payload.get("codec", "zlib"))
+                               codec=payload.get("codec", "zlib"),
+                               advise=bool(payload.get("advise")))
     store.put(payload["target"], data)
     meta = parquet.read_footer(parquet.BytesSource(data))
+    encodings = {f.name: c.encoding
+                 for f, c in zip(meta.schema, meta.row_groups[0].chunks)}
     return json.dumps({"ok": True, "rows": rows, "size": len(data),
-                       "footer": meta.to_json()}).encode()
+                       "bytes_before": bytes_before,
+                       "encodings": encodings,
+                       "footer": meta.to_json(include_indexes=False)
+                       }).encode()
 
 
 def _peer_held(obj: ObjectHandle, name: str) -> bool:

@@ -206,3 +206,4 @@ def test_expr_json_roundtrip():
     back = Expr.from_json(pred.to_json())
     assert back.to_json() == pred.to_json()
     assert back.columns() == {"a", "b", "c"}
+

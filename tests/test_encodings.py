@@ -1,0 +1,138 @@
+"""Encoding satellite tests that must run without hypothesis:
+choose_encoding's sample-relative string-cardinality fix, and the
+encoding x dtype x validity x row-count round-trip grid (including the
+width-parameterized integer BITPACK and packed DICTP indices)."""
+
+import numpy as np
+import pytest
+
+from repro.aformat import encodings, parquet
+from repro.aformat.table import Column, Table
+
+# ---------------------------------------------------------------------------
+# choose_encoding: string cardinality compares against the SAMPLE size
+# ---------------------------------------------------------------------------
+
+
+def test_choose_encoding_high_cardinality_string_regression():
+    """100k unique strings: the old heuristic compared the 4096-row
+    sample's uniq count against len(values)//4 = 25000, so any column
+    over ~16k rows dictionary-encoded regardless of true cardinality.
+    High-cardinality strings must stay PLAIN."""
+    n = 100_000
+    vals = np.asarray([f"user-{i:07d}" for i in range(n)], object)
+    assert encodings.choose_encoding("string", vals) == encodings.PLAIN
+    # and DICT still wins when the sample really is low-cardinality
+    low = np.asarray(["a", "b", "c", "d"] * (n // 4), object)
+    assert encodings.choose_encoding("string", low) == encodings.DICT
+
+
+# ---------------------------------------------------------------------------
+# encodings round-trip grid: encoding x dtype x validity x 0/1-row edges
+# ---------------------------------------------------------------------------
+
+
+def _grid_values(ftype, n, rng):
+    if ftype == "string":
+        return np.asarray(rng.choice(["aa", "b", "cccc", "dd"], n)
+                          if n else [], object)
+    if ftype == "bool":
+        return rng.integers(0, 2, n) == 0
+    dt = np.dtype(ftype)
+    return rng.integers(-50, 50, n).astype(dt) if dt.kind == "i" \
+        else rng.normal(size=n).astype(dt)
+
+
+_GRID = [
+    ("plain", ["int32", "int64", "float32", "float64", "string", "bool"]),
+    ("dict", ["int32", "int64", "float32", "float64", "string"]),
+    ("dictp", ["int32", "int64", "float32", "float64", "string"]),
+    ("rle", ["int32", "int64", "float32", "float64", "bool"]),
+    ("delta", ["int32", "int64"]),
+    ("bitpack", ["bool", "int32", "int64"]),
+]
+
+
+@pytest.mark.parametrize("enc,types", _GRID)
+@pytest.mark.parametrize("n", [0, 1, 3, 257])
+def test_encoding_grid_roundtrip(enc, types, n):
+    rng = np.random.default_rng(7 * n + 1)
+    for ftype in types:
+        vals = _grid_values(ftype, n, rng)
+        if enc == "delta":
+            vals = np.sort(vals)
+        try:
+            bufs = encodings.encode(ftype, enc, vals)
+        except ValueError:
+            continue  # encoding legitimately refused for these values
+        dt = None if ftype == "string" else np.dtype(ftype)
+        back = encodings.decode(ftype, enc, bufs, n, dt)
+        if ftype == "string":
+            assert [str(v) for v in back] == [str(v) for v in vals]
+        else:
+            assert np.array_equal(np.asarray(back, dt), vals), \
+                (enc, ftype, n)
+
+
+@pytest.mark.parametrize("ftype", ["int32", "int64"])
+def test_int_bitpack_width_parameterized(ftype):
+    """Integer BITPACK rebases to min and packs at the range's width."""
+    rng = np.random.default_rng(0)
+    vals = (rng.integers(0, 6, 1000) + 1_000_000).astype(ftype)
+    bufs = encodings.encode(ftype, encodings.BITPACK, vals)
+    # header (base + width byte) and 3 bits/value of payload
+    assert len(bufs[0]) == 9
+    assert len(bufs[1]) == -(-1000 * 3 // 8)
+    back = encodings.decode(ftype, encodings.BITPACK, bufs, 1000,
+                            np.dtype(ftype))
+    assert np.array_equal(back, vals)
+    # negatives rebase too
+    neg = np.asarray([-7, -3, -7, -1], ftype)
+    bufs = encodings.encode(ftype, encodings.BITPACK, neg)
+    back = encodings.decode(ftype, encodings.BITPACK, bufs, 4,
+                            np.dtype(ftype))
+    assert np.array_equal(back, neg)
+
+
+def test_int_bitpack_overflow_refused():
+    vals = np.asarray([-2**62, 2**62], np.int64)
+    with pytest.raises(ValueError):
+        encodings.encode("int64", encodings.BITPACK, vals)
+    with pytest.raises(ValueError):
+        encodings.encode("float64", encodings.BITPACK,
+                         np.asarray([1.0, 2.0]))
+
+
+def test_dictp_packs_indices():
+    vals = np.asarray(["x", "y"] * 500, object)
+    dict_bufs = encodings.encode("string", encodings.DICT, vals)
+    packed = encodings.encode("string", encodings.DICTP, vals)
+    # int32 codes: 4 bytes/row; packed: 1 bit/row (2 uniques) + width
+    assert len(dict_bufs[0]) == 4000
+    assert len(packed[0]) == 1 + 125
+    back = encodings.decode("string", encodings.DICTP, packed, 1000, None)
+    assert [str(v) for v in back] == [str(v) for v in vals]
+
+
+def test_grid_roundtrip_with_validity_through_file():
+    """Validity rides as the trailing buffer for every encoding: pin it
+    end-to-end through write_table/scan_file (nulls must survive the
+    advisor's re-encode too)."""
+    n = 500
+    rng = np.random.default_rng(3)
+    validity = rng.integers(0, 5, n) > 0
+    from repro.aformat.schema import schema
+
+    sch = schema(("a", "int64"), ("b", "string"), nullable=("a",))
+    cols = [Column(sch.field("a"),
+                   rng.integers(0, 4, n).astype(np.int64), validity),
+            Column(sch.field("b"),
+                   np.asarray(rng.choice(["p", "q"], n), object))]
+    t = Table(sch, cols)
+    for advise in (False, True):
+        data = parquet.write_table(t, row_group_rows=200, advise=advise)
+        out = parquet.scan_file(parquet.BytesSource(data))
+        col = out.column("a")
+        assert np.array_equal(col.validity, validity)
+        assert np.array_equal(col.values[validity],
+                              cols[0].values[validity])

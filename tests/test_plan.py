@@ -269,12 +269,13 @@ Limit[n=10]
       Scan[flat, fragments=2, rows=4096, columns=*]
 == optimizer ==
 - projection-pushdown: scan ships [trip_id]
-- stats-pruning: 1 of 2 fragments pruned, 0 predicate-free after ALL verdicts
+- stats-pruning: 1 of 2 fragments pruned (0 by bloom index), 0 predicate-free after ALL verdicts
 - limit-pushdown: row budget 10; plan truncated to 1 tasks (0 dropped), budget rides into scan_op
 == physical plan ==
 executor: streaming, format=pushdown, max_inflight=16, queue_depth=4/OSD, row_budget=10
 fragments: 2 total, 1 pruned, 0 metadata-answered, 1 tasks
-  [0] scan /g/a.arw#0 rows=2048 pred=trip_id < 100 limit<=10 | placement=osd"""
+  [0] scan /g/a.arw#0 rows=2048 pred=trip_id < 100 limit<=10 | placement=osd
+  [-] pruned /g/a.arw#0 (stats prove NONE)"""
     assert q.explain() == golden
 
 
